@@ -1,0 +1,38 @@
+"""Fig. 12 analogue + the assignment's §Roofline table.
+
+Reads the dry-run records (experiments/dryrun/*.json) and prints, per
+(arch x shape) cell on the single-pod mesh: the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and operational
+intensity (the paper's Fig. 12 x-axis).
+"""
+from __future__ import annotations
+
+from benchmarks.roofline import load_records
+
+
+def run() -> list[str]:
+    out = ["fig12,arch,shape,t_compute_s,t_memory_s,t_collective_s,"
+           "dominant,compute_frac,model_over_hlo,oper_intensity"]
+    for r in load_records(mesh="single"):
+        if r.get("status") != "ok":
+            out.append(f"fig12,{r['arch']},{r['shape']},-,-,-,"
+                       f"{r.get('status')},{r.get('reason', '')},-,-")
+            continue
+        rl = r["roofline"]
+        oi = r["hlo_flops"] / max(r["hlo_bytes"], 1.0)
+        out.append(
+            f"fig12,{r['arch']},{r['shape']},"
+            f"{rl['t_compute_s']:.4g},{rl['t_memory_s']:.4g},"
+            f"{rl['t_collective_s']:.4g},{rl['dominant']},"
+            f"{rl['compute_fraction']:.4f},"
+            f"{r.get('model_over_hlo')},{oi:.2f}")
+    return out
+
+
+def main() -> None:
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

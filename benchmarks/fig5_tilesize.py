@@ -1,0 +1,46 @@
+"""Fig. 5/9/13 analogue: tile-size sweep.
+
+The paper sweeps TS_MHA x TS_FFN against frequency/latency/resources.
+TPU version: sweep (bm, bk, bn) BlockSpec shapes for the two workload
+matmuls (MHA projection and FFN1 of BERT at SL 4096) and report modeled
+latency, VMEM fit and MXU occupancy — the frequency cliff becomes the
+VMEM-overflow cliff.
+"""
+from __future__ import annotations
+
+from repro.core.analytical import V5E
+from repro.core.tiling import TilePlan, plan_matmul
+
+# BERT-base MHA projection and FFN1 at SL 4096 (the paper's workload family)
+WORKLOADS = [("mha_proj", 4096, 768, 768), ("ffn1", 4096, 768, 3072)]
+BLOCKS = (128, 256, 512, 1024)
+
+
+def run() -> list[str]:
+    out = ["fig5,workload,bm,bk,bn,vmem_mib,fits,occupancy,t_model_us,"
+           "dominant"]
+    for name, M, K, N in WORKLOADS:
+        for bm in BLOCKS:
+            for bn in BLOCKS:
+                p = TilePlan(bm=bm, bk=256, bn=bn, M=M, K=K, N=N)
+                tc, tm = p.latency()
+                fits = p.vmem_bytes <= V5E.vmem_bytes
+                out.append(
+                    f"fig5,{name},{bm},256,{bn},"
+                    f"{p.vmem_bytes / 2**20:.1f},{int(fits)},"
+                    f"{p.mxu_occupancy:.3f},{max(tc, tm) * 1e6:.1f},"
+                    f"{'compute' if tc > tm else 'memory'}")
+        best = plan_matmul(M, K, N)
+        out.append(f"fig5_best,{name},{best.bm},{best.bk},{best.bn},"
+                   f"{best.vmem_bytes / 2**20:.1f},1,"
+                   f"{best.mxu_occupancy:.3f},{best.t_total * 1e6:.1f},-")
+    return out
+
+
+def main() -> None:
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 8 analogue: performance vs number of attention heads, swept at
+RUNTIME on one compiled adaptive engine (the heads register).
+
+The paper's frequency-degradation effect is FPGA-specific; the TPU
+analogue reported here is (a) measured wall time per call on this host —
+constant, because the padded fabric computes the maxima regardless, and
+(b) the *live* FLOP fraction, which is what a Pallas-masked deployment
+recovers.  One compile, six topologies.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import AdaptiveEngine, EngineOptions
+from repro.core.registers import Maxima, make_registers
+
+
+def run() -> list[str]:
+    mx = Maxima(seq_max=64, heads_max=12, layers_enc_max=4, layers_dec_max=0,
+                d_model_max=768, d_ff_max=3072, out_max=768,
+                head_dim_max=64, vocab=1000)
+    eng = AdaptiveEngine(mx, EngineOptions(batch=1))
+    step = eng.compile()
+    params = eng.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0, 1000)
+    out = ["fig8,heads,wall_us_per_call,live_flop_frac,traces"]
+    for h in (2, 4, 6, 8, 10, 12):
+        regs = make_registers(sequence=64, heads=h, layers_enc=4,
+                              layers_dec=0, embeddings=64 * h,
+                              hidden=4 * 64 * h, out=768)
+        step(params, regs, jnp.int32(0), toks).block_until_ready()
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            step(params, regs, jnp.int32(0), toks).block_until_ready()
+        dt = (time.perf_counter() - t0) / n
+        live = (h / mx.heads_max) ** 2  # d_model and d_ff scale with h here
+        out.append(f"fig8,{h},{dt * 1e6:.0f},{live:.3f},{eng.trace_count()}")
+    assert eng.trace_count() == 1
+    return out
+
+
+def main() -> None:
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

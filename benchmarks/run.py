@@ -1,0 +1,51 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints CSV blocks:
+  table1  — throughput/efficiency per network (GOPS analogues)
+  table2  — analytical model vs compiled HLO (% error)
+  fig5    — tile-size sweep (VMEM fit / occupancy / modeled latency)
+  fig8    — runtime heads-register sweep on one compiled engine
+  fig11   — portability: tile re-planning across memory budgets
+  fig12   — the 40-cell roofline table from the dry-run records
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig5_tilesize, fig8_heads, fig11_portability,
+                        fig12_roofline, table1_throughput, table2_analytical)
+
+SECTIONS = [
+    ("table1", table1_throughput.run),
+    ("table2", table2_analytical.run),
+    ("fig5", fig5_tilesize.run),
+    ("fig8", fig8_heads.run),
+    ("fig11", fig11_portability.run),
+    ("fig12", fig12_roofline.run),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for name, fn in SECTIONS:
+        if only and name != only:
+            continue
+        t0 = time.perf_counter()
+        print(f"== {name} ==", flush=True)
+        try:
+            for line in fn():
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR")
+            traceback.print_exc()
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

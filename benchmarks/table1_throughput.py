@@ -1,0 +1,56 @@
+"""Table 1 analogue: achieved throughput / efficiency per network.
+
+The paper reports GOPS, GOPS/DSP and GOPS/W for three networks on fixed
+fabric.  TPU mapping (all modeled from the roofline, labeled as such):
+  GOPS        -> achieved FLOP/s = model FLOPs / roofline-bound time
+  GOPS/DSP    -> MXU utilization = achieved / peak
+  GOPS/W      -> achieved FLOP/s / modeled chip power (v5e TDP ~ 200 W)
+One chip, forward pass, SL 64 — the paper's measurement point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.analytical import V5E, analytical_step_seconds, step_flops
+
+CHIP_WATTS = 200.0
+NETWORKS = ["shallow-transformer", "custom-encoder", "adaptor-bert"]
+
+
+def run() -> list[str]:
+    out = ["table1,network,gflops_step,achieved_tflops_s,mxu_frac,"
+           "gflops_per_watt,dominant"]
+    for name in NETWORKS:
+        cfg = get_config(name)
+        shape = ShapeSpec("bench", 64, 1, "prefill")
+        f = step_flops(cfg, shape)["total"]
+        r = analytical_step_seconds(cfg, shape, n_chips=1)
+        achieved = f / r.t_total
+        out.append(
+            f"table1,{name},{f / 1e9:.2f},{achieved / 1e12:.3f},"
+            f"{achieved / V5E.peak_flops:.4f},"
+            f"{achieved / 1e9 / CHIP_WATTS:.2f},{r.dominant}")
+    # the paper's batch=1 SL=64 point is hopelessly memory-bound on any
+    # accelerator; show the batched serving point too (beyond-paper)
+    for name in NETWORKS:
+        cfg = get_config(name)
+        shape = ShapeSpec("bench", 64, 128, "prefill")
+        f = step_flops(cfg, shape)["total"]
+        r = analytical_step_seconds(cfg, shape, n_chips=1)
+        achieved = f / r.t_total
+        out.append(
+            f"table1_b128,{name},{f / 1e9:.2f},{achieved / 1e12:.3f},"
+            f"{achieved / V5E.peak_flops:.4f},"
+            f"{achieved / 1e9 / CHIP_WATTS:.2f},{r.dominant}")
+    return out
+
+
+def main() -> None:
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

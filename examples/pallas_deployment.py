@@ -1,0 +1,57 @@
+"""Run a model with the ADAPTOR Pallas kernels in the matmul path.
+
+``backend.use('pallas')`` swaps every ``layers.dense`` matmul for the
+Fig. 4 K-tiled accumulating kernel (interpret mode on CPU; the identical
+call emits Mosaic kernels on TPU).  The output must match the XLA path.
+
+    PYTHONPATH=src python examples/pallas_deployment.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.quant import quantize
+from repro.kernels import ops
+from repro.models import backend
+from repro.models.model import Model
+
+
+def main() -> None:
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+
+    t0 = time.perf_counter()
+    ref = model.forward(params, batch)
+    t_xla = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with backend.use("pallas"):
+        got = model.forward(params, batch)
+    t_pl = time.perf_counter() - t0
+
+    err = float(jnp.max(jnp.abs(got - ref)))
+    scale = float(jnp.abs(ref).max())
+    print(f"XLA path     : {t_xla:6.2f}s")
+    print(f"Pallas path  : {t_pl:6.2f}s (interpret mode on CPU — the same "
+          f"call emits real kernels on TPU)")
+    print(f"max |diff|   : {err:.4f} on logit scale {scale:.1f} "
+          f"({'OK' if err < 0.05 * scale else 'MISMATCH'})")
+
+    # the quantized serving path (paper C6): int8 weights, one kernel call
+    w = params["layers"]["ffn"]["w1"]["kernel"][0]
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, w.shape[0]),
+                          jnp.bfloat16)
+    y_int8 = ops.quantized_dense(x, quantize(w))
+    y_ref = (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(jnp.bfloat16)
+    rel = float(jnp.linalg.norm((y_int8 - y_ref).astype(jnp.float32))
+                / jnp.linalg.norm(y_ref.astype(jnp.float32)))
+    print(f"int8 kernel rel err vs f32: {rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""End-to-end LM pretraining driver with checkpoint/restart.
+
+Presets:
+  quick (default) — ~6M params, 120 steps, finishes in a couple of
+                    minutes on this CPU container.
+  100m            — a ~100M-parameter model, few hundred steps; the
+                    deliverable-scale run for real hardware
+                    (`--preset 100m --steps 300`).
+
+Demonstrates: config surgery via dataclasses.replace, the deterministic
+packed data pipeline, the full sharded train step (single-device mesh
+here, identical code on a pod), async checkpointing, and fault-tolerant
+resume (kill it mid-run and start it again).
+
+    PYTHONPATH=src python examples/train_lm.py [--preset 100m] [--steps N]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMStream
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_dev_mesh
+from repro.models.model import Model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (TrainStepConfig, init_state,
+                                       make_train_step)
+
+PRESETS = {
+    # name: (layers, d_model, d_ff, heads, kv, vocab, batch, seq)
+    "quick": (4, 256, 704, 4, 4, 4096, 8, 128),
+    "100m": (12, 768, 2048, 12, 12, 32_000, 32, 512),
+}
+
+
+def build_config(preset: str):
+    L, d, ff, h, kv, v, b, s = PRESETS[preset]
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-0.5b"), num_layers=L, d_model=d, d_ff=ff,
+        num_heads=h, num_kv_heads=kv, vocab_size=v, head_dim=d // h,
+        tie_embeddings=True)
+    return cfg, b, s
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg, batch_size, seq = build_config(args.preset)
+    model = Model(cfg)
+    n_params = cfg.param_count()
+    print(f"preset={args.preset}: {cfg.num_layers}L d={cfg.d_model} "
+          f"-> {n_params / 1e6:.1f}M params, batch {batch_size} x seq {seq}")
+
+    mesh = make_dev_mesh()
+    strategy = shd.strategy_for_mesh(mesh)
+    opt = AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps)
+    stream = SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=seq,
+                               global_batch=batch_size, seed=0)
+
+    state = init_state(model, jax.random.PRNGKey(0), opt)
+    start = 0
+    got = ckpt.restore_latest(args.ckpt_dir, state)
+    if got is not None:
+        state, meta = got
+        start = meta["step"]
+        stream = SyntheticLMStream.restore(
+            meta["data_state"], vocab_size=cfg.vocab_size, seq_len=seq,
+            global_batch=batch_size)
+        print(f"resumed from checkpoint at step {start}")
+
+    batch = stream.next()
+    specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in batch.items()}
+    step_fn, _, _ = make_train_step(
+        model, mesh, strategy, TrainStepConfig(optimizer=opt), specs)
+
+    t0, first_loss = time.time(), None
+    for i in range(start, args.steps):
+        state, metrics = step_fn(state, batch)
+        batch = stream.next()
+        loss = float(metrics["loss"])
+        first_loss = first_loss if first_loss is not None else loss
+        if (i + 1) % 20 == 0 or i == start:
+            tok_s = (i + 1 - start) * batch_size * seq / (time.time() - t0)
+            print(f"step {i + 1:4d}  loss {loss:7.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  {tok_s:,.0f} tok/s",
+                  flush=True)
+        if (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, state,
+                      meta={"data_state": stream.state()}, async_write=True)
+    ckpt.save(args.ckpt_dir, args.steps, state,
+              meta={"data_state": stream.state()})
+    print(f"final loss {loss:.4f} (from {first_loss:.4f}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Architecture + shape configuration dataclasses.
+
+Every assigned architecture (plus the paper's own evaluation networks) is a
+frozen ``ArchConfig``.  A config is pure data: the model zoo in
+``repro.models`` interprets it, the launcher lowers it, and the ADAPTOR core
+(``repro.core``) builds runtime-adaptive engines whose *maxima* are taken from
+one of these configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+
+    num_experts: int
+    experts_per_token: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_expert_d_ff: int = 0
+    # Layers [0, first_k_dense) use a dense FFN of size ``dense_d_ff`` instead
+    # of the MoE block (DeepSeek-V3 uses 3 dense layers).
+    first_k_dense: int = 0
+    dense_d_ff: int = 0
+    router_scale: float = 1.0
+    # Expert capacity factor: C = ceil(S * k / E * capacity_factor); tokens
+    # routed past capacity are dropped (residual keeps them intact).
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V3) configuration."""
+
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective-SSM configuration."""
+
+    state_dim: int = 16
+    conv_kernel: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style hybrid (RG-LRU + local attention) configuration."""
+
+    # Block pattern, repeated over depth: 'r' = RG-LRU block, 'a' = local attn.
+    pattern: tuple[str, ...] = ("r", "r", "a")
+    lru_width: int = 0  # 0 -> d_model
+    attention_window: int = 2048
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder/decoder (Whisper) configuration."""
+
+    num_encoder_layers: int
+    # Length of the (stub) frontend output fed to the encoder.  For Whisper
+    # this is n_audio_frames / 2 after the conv stack.
+    encoder_seq_len: int = 1500
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend: ``input_specs`` provides precomputed embeddings."""
+
+    kind: str  # 'vision' | 'audio'
+    num_tokens: int  # patch / frame token count delivered by the stub
+    feature_dim: int  # embedding dim delivered by the stub (== d_model)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A single architecture from the assigned pool (or the paper's own)."""
+
+    name: str
+    family: str  # dense | moe | vlm | ssm | hybrid | audio | encoder
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    activation: str = "swiglu"  # swiglu | geglu | gelu | relu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    positional: str = "rope"  # rope | learned | none
+    tie_embeddings: bool = False
+    max_position_embeddings: int = 131_072
+    source: str = ""  # provenance tag from the assignment table
+
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+    encdec: EncDecConfig | None = None
+    frontend: FrontendConfig | None = None
+    # Multi-token prediction depth (DeepSeek-V3 MTP); 0 disables.
+    num_mtp_modules: int = 0
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_full_attention_decode(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if serve-time cost is sub-quadratic in sequence length."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embedding + per-layer), used by the
+        roofline model's 6·N·D term and by DESIGN/EXPERIMENTS reporting."""
+        from repro.core.analytical import arch_param_count
+
+        return arch_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.core.analytical import arch_param_count
+
+        return arch_param_count(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell from the assignment (seq_len x global_batch)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+# The four assigned LM shapes.  ``decode_*`` / ``long_*`` lower ``serve_step``
+# (one new token against a KV cache of seq_len), not ``train_step``.
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def cell_is_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and if not, why (for the report).
+
+    Per assignment: ``long_500k`` needs sub-quadratic attention -> skipped for
+    pure full-attention archs; encoder-only archs have no decode step.
+    """
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "skip: full quadratic attention at 512k context"
+    if shape.is_decode and not cfg.supports_full_attention_decode:
+        return False, "skip: encoder-only arch has no decode step"
+    return True, ""
+
+
+def reduced(cfg: ArchConfig, **overrides: Any) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests.
+
+    Keeps every structural feature (GQA ratio, MoE routing, MLA, SSM, hybrid
+    pattern, enc-dec) while shrinking width/depth/vocab.
+    """
+    small: dict[str, Any] = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=64,
+        d_ff=128,
+        vocab_size=128,
+        max_position_embeddings=512,
+    )
+    # Preserve the GQA grouping ratio with >=1 kv head.
+    ratio = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    heads = 4
+    small["num_heads"] = heads
+    small["num_kv_heads"] = max(1, heads // ratio)
+    small["head_dim"] = 16
+    if cfg.moe is not None:
+        small["moe"] = MoEConfig(
+            num_experts=4,
+            experts_per_token=min(2, cfg.moe.experts_per_token),
+            expert_d_ff=32,
+            num_shared_experts=cfg.moe.num_shared_experts,
+            shared_expert_d_ff=32 if cfg.moe.num_shared_experts else 0,
+            first_k_dense=min(1, cfg.moe.first_k_dense),
+            dense_d_ff=128 if cfg.moe.first_k_dense else 0,
+        )
+    if cfg.mla is not None:
+        small["mla"] = MLAConfig(
+            q_lora_rank=32,
+            kv_lora_rank=16,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        )
+    if cfg.ssm is not None:
+        small["ssm"] = SSMConfig(state_dim=8, conv_kernel=4, expand=2, dt_rank=8)
+    if cfg.hybrid is not None:
+        small["hybrid"] = HybridConfig(
+            pattern=cfg.hybrid.pattern, lru_width=0, attention_window=32
+        )
+        small["num_layers"] = len(cfg.hybrid.pattern)  # one full pattern period
+    if cfg.encdec is not None:
+        small["encdec"] = EncDecConfig(num_encoder_layers=2, encoder_seq_len=16)
+    if cfg.frontend is not None:
+        small["frontend"] = FrontendConfig(
+            kind=cfg.frontend.kind, num_tokens=8, feature_dim=64
+        )
+    if cfg.num_mtp_modules:
+        small["num_mtp_modules"] = 1
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+DEFAULT_PARAM_DTYPE = jnp.float32
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16

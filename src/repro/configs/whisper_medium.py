@@ -1,0 +1,26 @@
+"""whisper-medium  [arXiv:2212.04356; unverified]
+
+Enc-dec, 24 encoder + 24 decoder layers, d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865.  Conv audio frontend is a STUB per assignment: ``input_specs``
+supplies precomputed frame embeddings (1500 x d_model after conv downsampling).
+"""
+from repro.configs.base import ArchConfig, EncDecConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,  # decoder layers
+    d_model=1_024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4_096,
+    vocab_size=51_865,
+    head_dim=64,
+    activation="gelu",
+    norm="layernorm",
+    positional="learned",
+    max_position_embeddings=4_096,
+    source="arXiv:2212.04356",
+    encdec=EncDecConfig(num_encoder_layers=24, encoder_seq_len=1_500),
+    frontend=FrontendConfig(kind="audio", num_tokens=1_500, feature_dim=1_024),
+)

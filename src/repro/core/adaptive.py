@@ -1,0 +1,306 @@
+"""The ADAPTOR engine: compile once, run any topology within maxima (C1).
+
+FPGA flow (paper)                      | This module
+---------------------------------------+----------------------------------
+synthesize fabric at TS_MHA/TS_FFN     | ``AdaptiveEngine(maxima)`` +
+maxima, ~36 h                          | ``engine.compile(...)`` (once)
+write AXI-Lite topology registers      | pass ``TopologyRegisters`` values
+start signal                           | call the compiled step
+different model, no re-synthesis       | different registers, **no retrace**
+
+The engine is a *padded maximal* post-LN transformer encoder/decoder — the
+paper's exact domain (Eq. 1-7, BERT-style): every buffer is allocated at
+the synthesis maxima; topologies smaller than the maxima leave lanes idle,
+and `core.masking` keeps idle lanes from contaminating live ones (the XLA
+equivalent of unused DSPs holding garbage that never reaches an output).
+
+Weight layout note: GQA models are packed by *replicating* KV weights
+across the head group at load time (``pack``), so the runtime compute is
+uniform MHA over ``heads`` lanes — the same trick the paper uses when it
+maps any head count onto the fixed PE array.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking
+from repro.core.registers import Maxima, TopologyRegisters
+from repro.models.params import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    batch: int = 1
+    dtype: Any = jnp.float32
+    decoder: bool = False            # provision a decoder stack (layers_dec)
+    pooled_output: bool = False      # [B, out] pooled vs [B, S, out] logits
+
+
+class AdaptiveEngine:
+    """One synthesized 'fabric' serving every topology within its maxima."""
+
+    def __init__(self, maxima: Maxima, options: EngineOptions | None = None):
+        self.mx = maxima
+        self.opt = options or EngineOptions()
+        self._compiled: Callable | None = None
+        self._jitted = None
+
+    # ------------------------------------------------------------------
+    # Parameter structure (synthesis-time buffers)
+    # ------------------------------------------------------------------
+    def build(self, b: ParamBuilder) -> dict:
+        mx = self.mx
+
+        def attn_block() -> dict:
+            return {
+                "wq": b.param((mx.d_model_max, mx.heads_max, mx.head_dim_max),
+                              ("embed", "heads", None)),
+                "wk": b.param((mx.d_model_max, mx.heads_max, mx.head_dim_max),
+                              ("embed", "heads", None)),
+                "wv": b.param((mx.d_model_max, mx.heads_max, mx.head_dim_max),
+                              ("embed", "heads", None)),
+                "bq": b.param((mx.heads_max, mx.head_dim_max), ("heads", None),
+                              init="zeros"),
+                "bk": b.param((mx.heads_max, mx.head_dim_max), ("heads", None),
+                              init="zeros"),
+                "bv": b.param((mx.heads_max, mx.head_dim_max), ("heads", None),
+                              init="zeros"),
+                "wo": b.param((mx.heads_max, mx.head_dim_max, mx.d_model_max),
+                              ("heads", None, "embed")),
+                "bo": b.param((mx.d_model_max,), ("embed",), init="zeros"),
+            }
+
+        def layer(cross: bool = False) -> dict:
+            p = {
+                "attn": attn_block(),
+                "ln1_g": b.param((mx.d_model_max,), ("embed",), init="ones"),
+                "ln1_b": b.param((mx.d_model_max,), ("embed",), init="zeros"),
+                "w1": b.param((mx.d_model_max, mx.d_ff_max), ("embed", "ffn")),
+                "b1": b.param((mx.d_ff_max,), ("ffn",), init="zeros"),
+                "w2": b.param((mx.d_ff_max, mx.d_model_max), ("ffn", "embed")),
+                "b2": b.param((mx.d_model_max,), ("embed",), init="zeros"),
+                "ln2_g": b.param((mx.d_model_max,), ("embed",), init="ones"),
+                "ln2_b": b.param((mx.d_model_max,), ("embed",), init="zeros"),
+            }
+            if cross:
+                p["cross"] = attn_block()
+                p["ln3_g"] = b.param((mx.d_model_max,), ("embed",), init="ones")
+                p["ln3_b"] = b.param((mx.d_model_max,), ("embed",), init="zeros")
+            return p
+
+        p: dict[str, Any] = {
+            "embed": b.param((mx.vocab, mx.d_model_max), ("vocab", "embed"),
+                             scale=0.02),
+            "pos": b.param((mx.seq_max, mx.d_model_max), ("pos", "embed"),
+                           scale=0.02),
+            "w_out": b.param((mx.d_model_max, mx.out_max), ("embed", "vocab")),
+            "b_out": b.param((mx.out_max,), ("vocab",), init="zeros"),
+        }
+        with b.stacked(mx.layers_enc_max):
+            p["enc"] = layer()
+        if self.opt.decoder and mx.layers_dec_max:
+            with b.stacked(mx.layers_dec_max):
+                p["dec"] = layer(cross=True)
+        return p
+
+    def init(self, rng: jax.Array) -> dict:
+        return self.build(ParamBuilder("init", rng, self.opt.dtype))
+
+    def abstract(self) -> dict:
+        return self.build(ParamBuilder("abstract", dtype=self.opt.dtype))
+
+    def axes(self) -> dict:
+        return self.build(ParamBuilder("axes", dtype=self.opt.dtype))
+
+    # ------------------------------------------------------------------
+    # Masked compute (Eq. 1-7 with live-lane masking)
+    # ------------------------------------------------------------------
+    def _activate(self, x: jax.Array, act_sel: jax.Array) -> jax.Array:
+        """Runtime-selected activation unit (§3.4): 0 = ReLU, 1 = GELU."""
+        return jnp.where(act_sel == 1,
+                         jax.nn.gelu(x.astype(jnp.float32), approximate=False),
+                         jax.nn.relu(x.astype(jnp.float32))).astype(x.dtype)
+
+    def _mha(self, x: jax.Array, kv_src: jax.Array, w: dict,
+             regs: TopologyRegisters, *, causal: bool) -> jax.Array:
+        """Masked multi-head attention: QKV_PM -> QK_PM -> softmax -> SV_PM."""
+        mx = self.mx
+        hd_live = regs.head_dim
+        h_mask = masking.dim_mask(mx.heads_max, regs.heads)[:, None]
+        e_mask = masking.dim_mask(mx.head_dim_max, hd_live)[None, :]
+        he_mask = (h_mask * e_mask).astype(x.dtype)
+
+        def proj(src, kernel, bias):
+            y = jnp.einsum("bsd,dhe->bshe", src, kernel.astype(src.dtype))
+            return (y + bias.astype(src.dtype)) * he_mask
+
+        q = proj(x, w["wq"], w["bq"])
+        k = proj(kv_src, w["wk"], w["bk"])
+        v = proj(kv_src, w["wv"], w["bv"])
+        scale = jax.lax.rsqrt(jnp.maximum(hd_live, 1).astype(jnp.float32))
+        s = jnp.einsum("bqhe,bkhe->bhqk", q, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = jnp.arange(s.shape[-2])[:, None]
+            kpos = jnp.arange(s.shape[-1])[None, :]
+            s = jnp.where((kpos <= qpos)[None, None], s, masking.NEG_INF)
+        kv_live = regs.sequence  # kv length == live sequence for both stacks
+        p = masking.masked_softmax(s, kv_live, axis=-1)
+        o = jnp.einsum("bhqk,bkhe->bqhe", p.astype(v.dtype), v) * he_mask
+        a = jnp.einsum("bqhe,hed->bqd", o, w["wo"].astype(x.dtype))
+        return a + w["bo"].astype(x.dtype)
+
+    def _ffn(self, x: jax.Array, w: dict, regs: TopologyRegisters,
+             act_sel: jax.Array) -> jax.Array:
+        f_mask = masking.dim_mask(self.mx.d_ff_max, regs.hidden, x.dtype)
+        f1 = jnp.einsum("bsd,df->bsf", x, w["w1"].astype(x.dtype))
+        f1 = self._activate((f1 + w["b1"].astype(x.dtype)) * f_mask, act_sel)
+        f1 = f1 * f_mask
+        f2 = jnp.einsum("bsf,fd->bsd", f1, w["w2"].astype(x.dtype))
+        return f2 + w["b2"].astype(x.dtype)
+
+    def _layer(self, x: jax.Array, w: dict, regs: TopologyRegisters,
+               act_sel: jax.Array, *, causal: bool,
+               enc_out: jax.Array | None = None) -> jax.Array:
+        d = regs.embeddings
+        a = self._mha(x, x, w["attn"], regs, causal=causal)
+        x = masking.masked_layernorm(x + a, w["ln1_g"], w["ln1_b"], d)
+        if enc_out is not None:
+            c = self._mha(x, enc_out, w["cross"], regs, causal=False)
+            x = masking.masked_layernorm(x + c, w["ln3_g"], w["ln3_b"], d)
+        f = self._ffn(x, w, regs, act_sel)
+        return masking.masked_layernorm(x + f, w["ln2_g"], w["ln2_b"], d)
+
+    def _embed(self, params: dict, tokens: jax.Array,
+               regs: TopologyRegisters) -> jax.Array:
+        x = params["embed"].astype(self.opt.dtype)[tokens]
+        x = x + params["pos"].astype(self.opt.dtype)[: tokens.shape[1]][None]
+        x = masking.mask_lanes(x, regs.embeddings, axis=-1)
+        return masking.mask_lanes(x, regs.sequence, axis=1)
+
+    def _stack(self, x: jax.Array, stacked: dict, n_live: jax.Array,
+               regs: TopologyRegisters, act_sel: jax.Array, *,
+               causal: bool, enc_out: jax.Array | None = None) -> jax.Array:
+        n_max = jax.tree.leaves(stacked)[0].shape[0]
+
+        def body(i, h):
+            w = jax.tree.map(lambda l: jax.lax.dynamic_index_in_dim(
+                l, i, keepdims=False), stacked)
+            h2 = self._layer(h, w, regs, act_sel, causal=causal,
+                             enc_out=enc_out)
+            return jnp.where(i < n_live, h2, h)  # idle layers pass through
+
+        return jax.lax.fori_loop(0, n_max, body, x)
+
+    # ------------------------------------------------------------------
+    # The compiled step (Alg. 18 body)
+    # ------------------------------------------------------------------
+    def serve_fn(self) -> Callable:
+        """Returns f(params, regs, act_sel, tokens[, tgt_tokens]) -> logits."""
+        mx, opt = self.mx, self.opt
+
+        def step(params: dict, regs: TopologyRegisters, act_sel: jax.Array,
+                 tokens: jax.Array, tgt_tokens: jax.Array | None = None):
+            x = self._embed(params, tokens, regs)
+            x = self._stack(x, params["enc"], regs.layers_enc, regs, act_sel,
+                            causal=False)
+            if opt.decoder and "dec" in params:
+                y = self._embed(params, tgt_tokens, regs)
+                y = self._stack(y, params["dec"], regs.layers_dec, regs,
+                                act_sel, causal=True, enc_out=x)
+                x = jnp.where(regs.layers_dec > 0, y, x)
+            if opt.pooled_output:
+                x = masking.masked_mean_pool(x, regs.sequence)[:, None]
+            logits = jnp.einsum("bsd,do->bso",
+                                x, params["w_out"].astype(x.dtype))
+            logits = logits + params["b_out"].astype(x.dtype)
+            return masking.mask_lanes(logits, regs.out, axis=-1)
+
+        return step
+
+    def compile(self, donate: bool = False):
+        """'Synthesis': jit once; every later topology is a register write."""
+        if self._jitted is None:
+            self._jitted = jax.jit(self.serve_fn(),
+                                   donate_argnums=() if not donate else (0,))
+        return self._jitted
+
+    def trace_count(self) -> int:
+        """Number of traces the compiled step has accumulated (must stay 1)."""
+        if self._jitted is None:
+            return 0
+        return self._jitted._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# Weight packing: unpadded topology weights -> padded engine buffers
+# ---------------------------------------------------------------------------
+def _pad_to(a: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    pads = [(0, t - s) for s, t in zip(a.shape, shape)]
+    return jnp.pad(a, pads)
+
+
+def pack(engine: AdaptiveEngine, net: dict) -> dict:
+    """Pack an unpadded post-LN network (see ``engine_ref.random_network``)
+    into the engine's padded buffers — the paper's weight-loading units
+    (§3.1-3.3), including KV replication for GQA topologies."""
+    mx = engine.mx
+    base = jax.tree.map(jnp.zeros_like,
+                        engine.init(jax.random.PRNGKey(0)))
+    d, h, hd = net["d_model"], net["heads"], net["head_dim"]
+    kv = net.get("kv_heads", h)
+    rep = h // kv
+
+    def pack_attn(dst: dict, a: dict) -> dict:
+        def split(w_, n):  # [d, n*hd] -> [d, n, hd]
+            return w_.reshape(w_.shape[0], n, hd)
+        wq = split(a["wq"], h)
+        wk = jnp.repeat(split(a["wk"], kv), rep, axis=1)
+        wv = jnp.repeat(split(a["wv"], kv), rep, axis=1)
+        out = dict(dst)
+        out["wq"] = _pad_to(wq, dst["wq"].shape)
+        out["wk"] = _pad_to(wk, dst["wk"].shape)
+        out["wv"] = _pad_to(wv, dst["wv"].shape)
+        out["bq"] = _pad_to(a["bq"].reshape(h, hd), dst["bq"].shape)
+        out["bk"] = _pad_to(jnp.repeat(a["bk"].reshape(kv, hd), rep, 0),
+                            dst["bk"].shape)
+        out["bv"] = _pad_to(jnp.repeat(a["bv"].reshape(kv, hd), rep, 0),
+                            dst["bv"].shape)
+        out["wo"] = _pad_to(a["wo"].reshape(h, hd, d), dst["wo"].shape)
+        out["bo"] = _pad_to(a["bo"], dst["bo"].shape)
+        return out
+
+    def pack_layer(dst: dict, src: dict) -> dict:
+        out = {"attn": pack_attn(dst["attn"], src["attn"])}
+        for k_ in ("ln1_g", "ln1_b", "ln2_g", "ln2_b",
+                   "w1", "b1", "w2", "b2"):
+            out[k_] = _pad_to(src[k_], dst[k_].shape)
+        if "cross" in src:
+            out["cross"] = pack_attn(dst["cross"], src["cross"])
+            out["ln3_g"] = _pad_to(src["ln3_g"], dst["ln3_g"].shape)
+            out["ln3_b"] = _pad_to(src["ln3_b"], dst["ln3_b"].shape)
+        return out
+
+    packed = dict(base)
+    packed["embed"] = _pad_to(net["embed"], base["embed"].shape)
+    packed["pos"] = _pad_to(net["pos"], base["pos"].shape)
+    packed["w_out"] = _pad_to(net["w_out"], base["w_out"].shape)
+    packed["b_out"] = _pad_to(net["b_out"], base["b_out"].shape)
+
+    def stack_layers(dst_stacked, layers_list, n_max):
+        one = jax.tree.map(lambda l: l[0], dst_stacked)
+        packed_layers = [pack_layer(one, lp) for lp in layers_list]
+        while len(packed_layers) < n_max:
+            packed_layers.append(jax.tree.map(jnp.zeros_like, one))
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *packed_layers)
+
+    packed["enc"] = stack_layers(base["enc"], net["enc_layers"],
+                                 mx.layers_enc_max)
+    if "dec" in base and net.get("dec_layers"):
+        packed["dec"] = stack_layers(base["dec"], net["dec_layers"],
+                                     mx.layers_dec_max)
+    return packed

@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the adaptive engine (unpadded, per-topology).
+
+Computes the paper's post-LN encoder/decoder (Eq. 1-7) directly at the
+*live* sizes, with no masking or padding.  The engine equivalence test
+asserts that the padded+masked engine output restricted to live lanes
+matches this oracle — i.e. idle fabric never contaminates live compute.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def random_network(rng: jax.Array, *, seq: int, d_model: int, heads: int,
+                   d_ff: int, layers_enc: int, layers_dec: int = 0,
+                   vocab: int = 1000, out: int | None = None,
+                   kv_heads: int | None = None) -> dict:
+    """An unpadded post-LN network in engine-native weight naming."""
+    kv_heads = kv_heads or heads
+    head_dim = d_model // heads
+    keys = iter(jax.random.split(rng, 4096))
+    nrm = lambda *s: (jax.random.normal(next(keys), s)
+                      / math.sqrt(max(s[0], 1))).astype(jnp.float32)
+
+    def attn() -> dict:
+        return {
+            "wq": nrm(d_model, heads * head_dim),
+            "wk": nrm(d_model, kv_heads * head_dim),
+            "wv": nrm(d_model, kv_heads * head_dim),
+            "bq": nrm(heads * head_dim) * 0.1,
+            "bk": nrm(kv_heads * head_dim) * 0.1,
+            "bv": nrm(kv_heads * head_dim) * 0.1,
+            "wo": nrm(heads * head_dim, d_model).reshape(heads, head_dim,
+                                                         d_model)
+            .reshape(heads * head_dim, d_model),
+            "bo": nrm(d_model) * 0.1,
+        }
+
+    def layer(cross: bool = False) -> dict:
+        p = {"attn": attn(),
+             "ln1_g": jnp.ones(d_model), "ln1_b": jnp.zeros(d_model),
+             "w1": nrm(d_model, d_ff), "b1": nrm(d_ff) * 0.1,
+             "w2": nrm(d_ff, d_model), "b2": nrm(d_model) * 0.1,
+             "ln2_g": jnp.ones(d_model), "ln2_b": jnp.zeros(d_model)}
+        if cross:
+            p["cross"] = attn()
+            p["ln3_g"] = jnp.ones(d_model)
+            p["ln3_b"] = jnp.zeros(d_model)
+        return p
+
+    return {
+        "seq": seq, "d_model": d_model, "heads": heads,
+        "kv_heads": kv_heads, "head_dim": head_dim, "d_ff": d_ff,
+        "vocab": vocab, "out": out or d_model,
+        "embed": 0.02 * jax.random.normal(next(keys), (vocab, d_model)),
+        "pos": 0.02 * jax.random.normal(next(keys), (seq, d_model)),
+        "w_out": nrm(d_model, out or d_model),
+        "b_out": jnp.zeros(out or d_model),
+        "enc_layers": [layer() for _ in range(layers_enc)],
+        "dec_layers": [layer(cross=True) for _ in range(layers_dec)],
+    }
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x, approximate=False) if kind == "gelu" \
+        else jax.nn.relu(x)
+
+
+def _mha(x, kv_src, a, heads, kv_heads, head_dim, *, causal=False):
+    b_, s, d = x.shape
+    sk = kv_src.shape[1]
+    rep = heads // kv_heads
+    q = (x @ a["wq"] + a["bq"]).reshape(b_, s, heads, head_dim)
+    k = (kv_src @ a["wk"] + a["bk"]).reshape(b_, sk, kv_heads, head_dim)
+    v = (kv_src @ a["wv"] + a["bv"]).reshape(b_, sk, kv_heads, head_dim)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s_ = jnp.einsum("bqhe,bkhe->bhqk", q, k) / math.sqrt(head_dim)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), bool))
+        s_ = jnp.where(mask[None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bkhe->bqhe", p, v).reshape(b_, s, heads * head_dim)
+    return o @ a["wo"] + a["bo"]
+
+
+def _layer(x, lp, heads, kv_heads, head_dim, act, *, causal=False,
+           enc_out=None):
+    a = _mha(x, x, lp["attn"], heads, kv_heads, head_dim, causal=causal)
+    x = _ln(x + a, lp["ln1_g"], lp["ln1_b"])
+    if enc_out is not None:
+        c = _mha(x, enc_out, lp["cross"], heads, kv_heads, head_dim)
+        x = _ln(x + c, lp["ln3_g"], lp["ln3_b"])
+    f = _act(x @ lp["w1"] + lp["b1"], act) @ lp["w2"] + lp["b2"]
+    return _ln(x + f, lp["ln2_g"], lp["ln2_b"])
+
+
+def forward(net: dict, tokens: jax.Array, *, activation: str = "relu",
+            tgt_tokens: jax.Array | None = None) -> jax.Array:
+    """tokens: [B, seq] (already at the live length).  -> [B, seq, out]."""
+    h, kv, hd = net["heads"], net["kv_heads"], net["head_dim"]
+    x = net["embed"][tokens] + net["pos"][: tokens.shape[1]][None]
+    for lp in net["enc_layers"]:
+        x = _layer(x, lp, h, kv, hd, activation)
+    if net["dec_layers"]:
+        y = net["embed"][tgt_tokens] + net["pos"][: tgt_tokens.shape[1]][None]
+        for lp in net["dec_layers"]:
+            y = _layer(y, lp, h, kv, hd, activation, causal=True, enc_out=x)
+        x = y
+    return x @ net["w_out"] + net["b_out"]

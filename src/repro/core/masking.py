@@ -1,0 +1,74 @@
+"""Masked primitives — runtime-adaptive equivalents of clock-gated modules.
+
+The FPGA activates only the PEs a topology needs; idle DSP lanes hold
+garbage that never reaches the output.  In a compiled XLA program every
+lane *is* computed, so correctness comes from masking instead: statistics
+(LayerNorm mean/variance, softmax normalizer) are taken over the *live*
+dims only, and dead lanes are zeroed before they can contaminate live ones.
+
+Every function takes static maxima shapes and traced live-extent scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def dim_mask(max_dim: int, live, dtype=jnp.float32) -> jax.Array:
+    """[max_dim] mask: 1.0 for lanes < live, else 0.0 (live may be traced)."""
+    return (jnp.arange(max_dim) < live).astype(dtype)
+
+
+def masked_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                     d_live, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the first ``d_live`` lanes of the last dim (Eq. 4)."""
+    m = dim_mask(x.shape[-1], d_live)
+    n = jnp.maximum(d_live, 1).astype(jnp.float32)
+    x32 = x.astype(jnp.float32) * m
+    mu = jnp.sum(x32, axis=-1, keepdims=True) / n
+    cent = (x32 - mu) * m
+    var = jnp.sum(jnp.square(cent), axis=-1, keepdims=True) / n
+    y = cent * jax.lax.rsqrt(var + eps)
+    return ((y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)) * m) \
+        .astype(x.dtype)
+
+
+def masked_rmsnorm(x: jax.Array, gamma: jax.Array, d_live,
+                   eps: float = 1e-6) -> jax.Array:
+    m = dim_mask(x.shape[-1], d_live)
+    n = jnp.maximum(d_live, 1).astype(jnp.float32)
+    x32 = x.astype(jnp.float32) * m
+    var = jnp.sum(jnp.square(x32), axis=-1, keepdims=True) / n
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32) * m) \
+        .astype(x.dtype)
+
+
+def masked_softmax(scores: jax.Array, live_len, axis: int = -1) -> jax.Array:
+    """Softmax over the first ``live_len`` entries of ``axis`` (Eq. 5 with
+    the Mask() of Eq. 1); dead entries get exactly 0 weight."""
+    size = scores.shape[axis]
+    live = jnp.arange(size) < live_len
+    shape = [1] * scores.ndim
+    shape[axis] = size
+    live = live.reshape(shape)
+    s = jnp.where(live, scores.astype(jnp.float32), NEG_INF)
+    out = jax.nn.softmax(s, axis=axis)
+    return jnp.where(live, out, 0.0)
+
+
+def masked_mean_pool(x: jax.Array, seq_live) -> jax.Array:
+    """[B, S_max, D] -> [B, D], averaging live positions only."""
+    m = dim_mask(x.shape[1], seq_live)[None, :, None]
+    n = jnp.maximum(seq_live, 1).astype(jnp.float32)
+    return (jnp.sum(x.astype(jnp.float32) * m, axis=1) / n).astype(x.dtype)
+
+
+def mask_lanes(x: jax.Array, live, axis: int = -1) -> jax.Array:
+    """Zero lanes >= live along ``axis``."""
+    size = x.shape[axis]
+    m = jnp.arange(size) < live
+    shape = [1] * x.ndim
+    shape[axis] = size
+    return x * m.reshape(shape).astype(x.dtype)

@@ -1,0 +1,87 @@
+"""Quantization path (paper C6: 'fully quantized for computational
+efficiency and portability').
+
+The FPGA uses fixed-point throughout (float->fixed conversion is even in
+the latency model, 3 cc).  The TPU-native equivalent is symmetric int8:
+
+* weights  — per-output-channel symmetric int8 (scale = amax / 127)
+* activations — per-tensor dynamic symmetric int8
+* accumulation — int32 on the MXU (f32 when emulated), rescaled to the
+  activation dtype on the way out.
+
+``int8_matmul`` in ``repro.kernels`` is the Pallas kernel consuming this
+format; this module provides the quantizers and the jnp reference path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    values: jax.Array  # int8
+    scale: jax.Array   # f32, broadcastable to values along the quant axis
+
+
+def quantize(w: jax.Array, axis: int | None = -1) -> QTensor:
+    """Symmetric int8 quantization.  ``axis=None`` -> per-tensor scale;
+    otherwise per-slice along ``axis`` (per-output-channel for weights)."""
+    w32 = w.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(w32))
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+        return QTensor(q, scale)
+    reduce_axes = tuple(i for i in range(w32.ndim) if i != axis % w32.ndim)
+    amax = jnp.max(jnp.abs(w32), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def quantize_dynamic(x: jax.Array) -> QTensor:
+    """Per-tensor dynamic activation quantization (serving path)."""
+    return quantize(x, axis=None)
+
+
+def int8_matmul_ref(x: jax.Array, qw: QTensor) -> jax.Array:
+    """Reference quantized matmul: dynamic-quant x, int accumulate,
+    rescale.  x: [..., K], qw.values: [K, N] -> [..., N] (x.dtype)."""
+    qx = quantize_dynamic(x)
+    acc = jnp.matmul(qx.values.astype(jnp.int32), qw.values.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * qx.scale * qw.scale.reshape(1, -1)
+    return out.astype(x.dtype)
+
+
+def quantize_tree(params, axis: int | None = -1,
+                  min_size: int = 4096) -> tuple[dict, dict]:
+    """Quantize every large float leaf of a param tree; small leaves
+    (biases, norms) stay in float.  Returns (quantized_tree, meta) where
+    meta marks which leaves were quantized."""
+    flat, treedef = jax.tree.flatten(params)
+    out, meta = [], []
+    for leaf in flat:
+        if (hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and leaf.size >= min_size and leaf.ndim >= 2):
+            out.append(quantize(leaf, axis=axis))
+            meta.append(True)
+        else:
+            out.append(leaf)
+            meta.append(False)
+    return jax.tree.unflatten(treedef, out), \
+        jax.tree.unflatten(treedef, meta)
+
+
+def quantization_error(w: jax.Array, axis: int | None = -1) -> float:
+    """Relative RMS error of the int8 round-trip (test/report helper)."""
+    q = quantize(w, axis)
+    back = dequantize(q)
+    num = jnp.sqrt(jnp.mean(jnp.square(back - w.astype(jnp.float32))))
+    den = jnp.sqrt(jnp.mean(jnp.square(w.astype(jnp.float32)))) + 1e-12
+    return float(num / den)

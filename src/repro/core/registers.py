@@ -1,0 +1,99 @@
+"""Topology registers — the paper's §3.12 configuration register file.
+
+On the FPGA these are AXI4-Lite registers written by the MicroBlaze before
+asserting the start signal.  Here they are a small pytree of *traced* int32
+scalars passed to an already-compiled step function: changing their values
+never triggers a retrace/recompile, exactly as reprogramming the register
+file never triggers re-synthesis.
+
+Registers (paper names kept):
+  sequence    — live sequence length        (<= seq_max)
+  heads       — live attention head count   (<= heads_max)
+  layers_enc  — live encoder layer count    (<= layers_enc_max)
+  layers_dec  — live decoder layer count    (<= layers_dec_max; 0 = enc-only)
+  embeddings  — live d_model                (<= d_model_max)
+  hidden      — live FFN hidden dim         (<= d_ff_max)
+  out         — live output class count     (<= out_max)
+plus one extension register for modern variants:
+  kv_heads    — live KV head count (GQA); == heads for MHA models
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+class TopologyRegisters(NamedTuple):
+    sequence: jax.Array
+    heads: jax.Array
+    layers_enc: jax.Array
+    layers_dec: jax.Array
+    embeddings: jax.Array
+    hidden: jax.Array
+    out: jax.Array
+    kv_heads: jax.Array
+
+    @property
+    def head_dim(self) -> jax.Array:
+        """d_k = embeddings / heads (paper §2.1), computed at runtime."""
+        return self.embeddings // jnp.maximum(self.heads, 1)
+
+
+def make_registers(*, sequence: int, heads: int, layers_enc: int,
+                   layers_dec: int = 0, embeddings: int, hidden: int,
+                   out: int = 0, kv_heads: int | None = None
+                   ) -> TopologyRegisters:
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    return TopologyRegisters(
+        sequence=i32(sequence), heads=i32(heads), layers_enc=i32(layers_enc),
+        layers_dec=i32(layers_dec), embeddings=i32(embeddings),
+        hidden=i32(hidden), out=i32(out if out else embeddings),
+        kv_heads=i32(kv_heads if kv_heads is not None else heads))
+
+
+def registers_for(cfg: ArchConfig, sequence: int,
+                  layers_dec: int | None = None) -> TopologyRegisters:
+    """Program the register file for one architecture config (Alg. 18 step 3)."""
+    return make_registers(
+        sequence=sequence,
+        heads=cfg.num_heads,
+        layers_enc=(cfg.encdec.num_encoder_layers if cfg.encdec
+                    else cfg.num_layers),
+        layers_dec=(layers_dec if layers_dec is not None
+                    else (cfg.num_layers if cfg.encdec else 0)),
+        embeddings=cfg.d_model,
+        hidden=cfg.d_ff,
+        out=cfg.vocab_size,
+        kv_heads=cfg.num_kv_heads,
+    )
+
+
+class Maxima(NamedTuple):
+    """Synthesis-time maxima — the provisioned 'fabric' (frozen at compile)."""
+
+    seq_max: int
+    heads_max: int
+    layers_enc_max: int
+    layers_dec_max: int
+    d_model_max: int
+    d_ff_max: int
+    out_max: int
+    head_dim_max: int
+    vocab: int
+
+    def validate(self, regs_static: dict) -> None:
+        lim = {"sequence": self.seq_max, "heads": self.heads_max,
+               "layers_enc": self.layers_enc_max,
+               "layers_dec": self.layers_dec_max,
+               "embeddings": self.d_model_max, "hidden": self.d_ff_max,
+               "out": self.out_max}
+        for k, mx in lim.items():
+            v = regs_static.get(k)
+            if v is not None and v > mx:
+                raise ValueError(
+                    f"register {k}={v} exceeds synthesized maximum {mx}; "
+                    f"re-synthesis (recompile) required")

@@ -1,0 +1,158 @@
+"""Tile-size planner — the paper's §3.9/§3.10 re-derived for VMEM (C2/C5).
+
+The paper picks TS_MHA/TS_FFN at synthesis time by sweeping tile sizes
+against (a) BRAM/DSP fit and (b) the post-route frequency cliff.  On TPU
+the hard constraint is the VMEM working set of a ``pallas_call`` grid
+step, and the "frequency cliff" becomes (i) HBM re-streaming cost when
+blocks are small and (ii) MXU misalignment when blocks are not multiples
+of 128.  ``plan_matmul`` scores candidate BlockSpec shapes under those
+terms and returns the operating point; ``benchmarks/fig5_tilesize.py``
+sweeps it the way the paper sweeps Fig. 5/9/13.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+from repro.core.analytical import TPUSpec, V5E
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(x: int, m: int) -> int:
+    return _ceil_div(x, m) * m
+
+
+@dataclass(frozen=True)
+class TilePlan:
+    """One matmul tiling decision: C[M,N] += A[M,K] @ B[K,N] in
+    (bm, bk, bn) blocks with K-major accumulation (paper Fig. 4)."""
+
+    bm: int
+    bk: int
+    bn: int
+    M: int
+    K: int
+    N: int
+    dtype_bytes: int = 2
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        return (_ceil_div(self.M, self.bm), _ceil_div(self.N, self.bn),
+                _ceil_div(self.K, self.bk))
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Working set per grid step: A + B blocks double-buffered,
+        f32 accumulator resident."""
+        a = self.bm * self.bk * self.dtype_bytes
+        b = self.bk * self.bn * self.dtype_bytes
+        acc = self.bm * self.bn * 4
+        return 2 * (a + b) + acc
+
+    @property
+    def hbm_traffic(self) -> int:
+        """Bytes streamed HBM->VMEM for the whole matmul: A is re-read once
+        per N-tile, B once per M-tile (the paper's tile 'replenish' count),
+        C written once."""
+        gm, gn, _ = self.grid
+        a = self.M * self.K * self.dtype_bytes * gn
+        b = self.K * self.N * self.dtype_bytes * gm
+        c = self.M * self.N * self.dtype_bytes
+        return a + b + c
+
+    @property
+    def mxu_occupancy(self) -> float:
+        """Fraction of MXU lanes doing useful work (alignment penalty)."""
+        eff = 1.0
+        for blk, dim in ((self.bm, self.M), (self.bn, self.N),
+                         (self.bk, self.K)):
+            pad = _round_up(dim, blk) * 1.0
+            eff *= dim / pad
+        align = 1.0
+        for blk in (self.bm, self.bn):
+            align *= min(blk, 128) / 128.0
+        return eff * align
+
+    def latency(self, spec: TPUSpec = V5E) -> tuple[float, float]:
+        """(t_compute, t_memory) seconds for one chip, roofline style."""
+        flops = 2.0 * self.M * self.K * self.N
+        t_c = flops / (spec.peak_flops * max(self.mxu_occupancy, 1e-9))
+        t_m = self.hbm_traffic / spec.hbm_bw
+        return t_c, t_m
+
+    @property
+    def t_total(self) -> float:
+        return max(self.latency())
+
+
+_CANDIDATE_BLOCKS = (128, 256, 512, 1024, 2048)
+
+
+def plan_matmul(M: int, K: int, N: int, dtype_bytes: int = 2,
+                spec: TPUSpec = V5E,
+                vmem_budget: int | None = None) -> TilePlan:
+    """Pick (bm, bk, bn) minimizing modeled latency under the VMEM budget.
+
+    This is the §3.10 procedure: enumerate tile sizes, reject the ones
+    that blow the on-chip budget (BRAM there, VMEM here), take the best
+    modeled operating point.
+    """
+    budget = vmem_budget or spec.vmem_bytes
+    best: TilePlan | None = None
+    for bm in _CANDIDATE_BLOCKS:
+        if bm // 2 >= _round_up(M, 128) and bm > 128:
+            continue
+        for bn in _CANDIDATE_BLOCKS:
+            if bn // 2 >= _round_up(N, 128) and bn > 128:
+                continue
+            for bk in _CANDIDATE_BLOCKS:
+                if bk // 2 >= _round_up(K, 128) and bk > 128:
+                    continue
+                plan = TilePlan(bm=min(bm, _round_up(M, 128)),
+                                bk=min(bk, _round_up(K, 128)),
+                                bn=min(bn, _round_up(N, 128)),
+                                M=M, K=K, N=N, dtype_bytes=dtype_bytes)
+                if plan.vmem_bytes > budget:
+                    continue
+                if best is None or plan.t_total < best.t_total:
+                    best = plan
+    if best is None:  # degenerate: even 128^3 blocks overflow -> smallest legal
+        best = TilePlan(bm=128, bk=128, bn=128, M=M, K=K, N=N,
+                        dtype_bytes=dtype_bytes)
+    return best
+
+
+def plan_for_shape(M: int, K: int, N: int, **kw) -> tuple[int, int, int]:
+    p = plan_matmul(M, K, N, **kw)
+    return p.bm, p.bk, p.bn
+
+
+def sweep(M: int, K: int, N: int, dtype_bytes: int = 2,
+          spec: TPUSpec = V5E) -> list[TilePlan]:
+    """All candidate plans (fit or not) — the Fig. 5/9/13 sweep data."""
+    out = []
+    for bm in _CANDIDATE_BLOCKS:
+        for bn in _CANDIDATE_BLOCKS:
+            for bk in _CANDIDATE_BLOCKS:
+                out.append(TilePlan(bm=bm, bk=bk, bn=bn, M=M, K=K, N=N,
+                                    dtype_bytes=dtype_bytes))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleTiling:
+    """ADAPTOR-style per-module tile configuration (TS_MHA / TS_FFN)."""
+
+    ts_mha: int = 512    # block width for attention-side matmuls
+    ts_ffn: int = 1024   # block width for FFN-side matmuls
+
+    def mha_plan(self, seq: int, d_model: int, heads: int) -> TilePlan:
+        hd = d_model // max(heads, 1)
+        return plan_matmul(seq, d_model, heads * hd)
+
+    def ffn_plan(self, seq: int, d_model: int, d_ff: int) -> TilePlan:
+        return plan_matmul(seq, d_model, d_ff)

@@ -1,0 +1,123 @@
+"""FFN_PM + bias-add + activation as one Pallas kernel (paper §3.7/3.8).
+
+The paper keeps FFN1_PM, the bias unit and the ReLU unit as separate RTL
+modules chained through BRAMs.  The TPU adaptation fuses them: the f32
+accumulator already sits in VMEM when the K loop finishes, so bias and
+activation are applied in-register before the single write-back —
+removing one full HBM round trip of the [M, d_ff] intermediate.  The
+gated variant (SwiGLU/GeGLU) keeps two accumulators and fuses the gate
+product too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind in ("silu", "swiglu"):
+        return jax.nn.silu(x)
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def _ffn_kernel(activation: str, x_ref, w1_ref, b1_ref, o_ref, acc):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(x_ref[...], w1_ref[...],
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        y = acc[...] + b1_ref[...].astype(jnp.float32)
+        o_ref[...] = _act(y, activation).astype(o_ref.dtype)
+
+
+def _gated_kernel(activation: str, x_ref, w1_ref, wg_ref, o_ref, acc1, accg):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc1[...] = jnp.zeros_like(acc1)
+        accg[...] = jnp.zeros_like(accg)
+
+    x = x_ref[...]
+    acc1[...] += jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    accg[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (_act(accg[...], activation) * acc1[...]) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bk", "bn",
+                                             "interpret"))
+def ffn1(x: jax.Array, w1: jax.Array, b1: jax.Array, *,
+         activation: str = "relu", bm: int = 512, bk: int = 512,
+         bn: int = 512, interpret: bool = False) -> jax.Array:
+    """act(x @ w1 + b1): [M, D] @ [D, F] -> [M, F]."""
+    M, D = x.shape
+    F = w1.shape[1]
+    bm, bk, bn = min(bm, _rup(M, 8)), min(bk, _rup(D, 8)), min(bn, _rup(F, 8))
+    Mp, Dp, Fp = _rup(M, bm), _rup(D, bk), _rup(F, bn)
+    x = jnp.pad(x, ((0, Mp - M), (0, Dp - D)))
+    w1 = jnp.pad(w1, ((0, Dp - D), (0, Fp - F)))
+    b1 = jnp.pad(b1, ((0, Fp - F),)).reshape(1, Fp)
+    out = pl.pallas_call(
+        functools.partial(_ffn_kernel, activation),
+        grid=(Mp // bm, Fp // bn, Dp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+                  pl.BlockSpec((1, bn), lambda i, j, k: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, b1)
+    return out[:M, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bk", "bn",
+                                             "interpret"))
+def ffn1_gated(x: jax.Array, w1: jax.Array, wg: jax.Array, *,
+               activation: str = "swiglu", bm: int = 512, bk: int = 512,
+               bn: int = 512, interpret: bool = False) -> jax.Array:
+    """act(x @ wg) * (x @ w1): the SwiGLU/GeGLU first half."""
+    M, D = x.shape
+    F = w1.shape[1]
+    bm, bk, bn = min(bm, _rup(M, 8)), min(bk, _rup(D, 8)), min(bn, _rup(F, 8))
+    Mp, Dp, Fp = _rup(M, bm), _rup(D, bk), _rup(F, bn)
+    x = jnp.pad(x, ((0, Mp - M), (0, Dp - D)))
+    w1 = jnp.pad(w1, ((0, Dp - D), (0, Fp - F)))
+    wg = jnp.pad(wg, ((0, Dp - D), (0, Fp - F)))
+    out = pl.pallas_call(
+        functools.partial(_gated_kernel, activation),
+        grid=(Mp // bm, Fp // bn, Dp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, wg)
+    return out[:M, :F]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,102 @@
+"""QK_PM + softmax + SV_PM fused — flash attention as the TPU-native
+composition of the paper's attention pipeline (§3.6.2-3.6.3).
+
+The FPGA stores the full S = QK^T score matrix in BRAM between the QK_PM
+and SV_PM modules; at 32k context that matrix alone would be 4 GiB.  The
+TPU adaptation keeps the *paper's fusion insight* (scores never leave
+on-chip memory) but replaces the materialized S with an online softmax:
+each grid step loads one KV block, updates a running (max, sum, weighted
+accumulator) triple held in VMEM scratch, and only the final O block is
+written to HBM.  This is exactly the ADAPTOR tiling discipline applied to
+the score matrix instead of the weight matrix.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(scale: float, causal: bool, kv_len: int, bq: int, bkv: int,
+                  q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0]                       # [bq, hd]
+    k = k_ref[0]                       # [bkv, hd]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < kv_len               # padded KV tail never contributes
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...]                  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)             # [bq, bkv]
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_s[...] = m_new
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _flush():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0] = (acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 512, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [BH, Sq, hd]; k/v: [BH, Skv, hd] -> [BH, Sq, hd].
+
+    KV heads must already be repeated to the query head count (the GQA
+    grouping happens at the wrapper level, as in ``models.attention``).
+    """
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(bq, _rup(Sq, 8))
+    bkv = min(bkv, _rup(Skv, 8))
+    Sqp, Skvp = _rup(Sq, bq), _rup(Skv, bkv)
+    hdp = _rup(hd, 128)
+    q = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, hdp - hd)))
+    k = jnp.pad(k, ((0, 0), (0, Skvp - Skv), (0, hdp - hd)))
+    v = jnp.pad(v, ((0, 0), (0, Skvp - Skv), (0, hdp - hd)))
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale, causal, Skv, bq, bkv),
+        grid=(BH, Sqp // bq, Skvp // bkv),
+        in_specs=[pl.BlockSpec((1, bq, hdp), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, bkv, hdp), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, bkv, hdp), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, bq, hdp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, hdp), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hdp), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq, :hd]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,79 @@
+"""Quantized matmul kernel — the paper's fixed-point path (C6) on TPU.
+
+int8 activations x int8 weights with int32 accumulation, per-output-
+channel weight scales and a per-tensor activation scale applied at the
+final write-back, inside the same Fig. 4 K-tiled grid as the float
+kernel.  Halves the HBM weight traffic and doubles effective MXU
+throughput relative to bf16 — the same motivation as the paper's
+fixed-point quantization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import QTensor, quantize_dynamic
+
+
+def _int8_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        scale = sx_ref[0, 0] * sw_ref[...].astype(jnp.float32)  # [1, bn]
+        o_ref[...] = (acc[...].astype(jnp.float32) * scale) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret",
+                                             "out_dtype"))
+def int8_matmul(qx_values: jax.Array, qx_scale: jax.Array,
+                qw_values: jax.Array, qw_scale: jax.Array, *,
+                bm: int = 512, bk: int = 512, bn: int = 512,
+                interpret: bool = False, out_dtype=jnp.bfloat16) -> jax.Array:
+    """[M,K]i8 @ [K,N]i8 -> [M,N] out_dtype, rescaled by sx * sw[n]."""
+    M, K = qx_values.shape
+    N = qw_values.shape[1]
+    bm, bk, bn = min(bm, _rup(M, 8)), min(bk, _rup(K, 8)), min(bn, _rup(N, 8))
+    Mp, Kp, Np = _rup(M, bm), _rup(K, bk), _rup(N, bn)
+    x = jnp.pad(qx_values, ((0, Mp - M), (0, Kp - K)))
+    w = jnp.pad(qw_values, ((0, Kp - K), (0, Np - N)))
+    sw = jnp.pad(qw_scale.reshape(1, N), ((0, 0), (0, Np - N)))
+    sx = qx_scale.reshape(1, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+                  pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+                  pl.BlockSpec((1, bn), lambda i, j, k: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w, sx, sw)
+    return out[:M, :N]
+
+
+def quantized_dense(x: jax.Array, qw: QTensor, *, interpret: bool = False,
+                    **blocks) -> jax.Array:
+    """Dynamic-quant serving dense: float x -> int8 -> kernel -> x.dtype."""
+    qx = quantize_dynamic(x)
+    return int8_matmul(qx.values, qx.scale, qw.values, qw.scale,
+                       interpret=interpret, out_dtype=x.dtype, **blocks)
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

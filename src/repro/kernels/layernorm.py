@@ -1,0 +1,85 @@
+"""LN unit as a Pallas kernel (paper §3.5, Algorithm 8).
+
+The paper's LN unit makes four passes over each row (mean, variance,
+normalize, scale+shift).  On TPU one row block fits VMEM whole, so all
+four fuse into a single read-compute-write pass on the VPU — the same
+module boundary, one HBM round trip instead of four.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(eps: float, d_live: int, x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [br, Dp]
+    mask = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) < d_live
+    x = jnp.where(mask, x, 0.0)
+    n = float(d_live)
+    mu = jnp.sum(x, axis=-1, keepdims=True) / n
+    cent = jnp.where(mask, x - mu, 0.0)
+    var = jnp.sum(cent * cent, axis=-1, keepdims=True) / n
+    y = cent * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.where(mask, y, 0.0).astype(o_ref.dtype)
+
+
+def _rms_kernel(eps: float, d_live: int, x_ref, g_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mask = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) < d_live
+    x = jnp.where(mask, x, 0.0)
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / float(d_live)
+    y = x * jax.lax.rsqrt(var + eps) * g_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.where(mask, y, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, br: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """Row-wise LayerNorm: x [R, D] -> [R, D]."""
+    R, D = x.shape
+    br = min(br, _rup(R, 8))
+    Rp, Dp = _rup(R, br), _rup(D, 128)
+    x = jnp.pad(x, ((0, Rp - R), (0, Dp - D)))
+    g = jnp.pad(gamma, ((0, Dp - D),)).reshape(1, Dp)
+    b = jnp.pad(beta, ((0, Dp - D),)).reshape(1, Dp)
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps, D),
+        grid=(Rp // br,),
+        in_specs=[pl.BlockSpec((br, Dp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, Dp), lambda i: (0, 0)),
+                  pl.BlockSpec((1, Dp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, Dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Dp), x.dtype),
+        interpret=interpret,
+    )(x, g, b)
+    return out[:R, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            br: int = 256, interpret: bool = False) -> jax.Array:
+    """Row-wise RMSNorm: x [R, D] -> [R, D]."""
+    R, D = x.shape
+    br = min(br, _rup(R, 8))
+    Rp, Dp = _rup(R, br), _rup(D, 128)
+    x = jnp.pad(x, ((0, Rp - R), (0, Dp - D)))
+    g = jnp.pad(gamma, ((0, Dp - D),)).reshape(1, Dp)
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps, D),
+        grid=(Rp // br,),
+        in_specs=[pl.BlockSpec((br, Dp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, Dp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, Dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Dp), x.dtype),
+        interpret=interpret,
+    )(x, g)
+    return out[:R, :D]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,95 @@
+"""QKV_PM as a Pallas kernel: fused Q/K/V projection (paper §3.6.1).
+
+Algorithm 9 computes Q, K and V in the *same* pipelined loop so the input
+tile x[i][j] is read from BRAM once and feeds three MAC chains.  The TPU
+version does the same: each grid step loads one (bm x bk) X block into
+VMEM once and contracts it against the Q, K and V weight blocks, keeping
+three f32 accumulators resident.  GQA is handled by masking the writes of
+the K/V outputs to their narrower head range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qkv_kernel(nkv_blocks: int, x_ref, wq_ref, wk_ref, wv_ref,
+                q_ref, k_ref, v_ref, acc_q, acc_k, acc_v):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    last = kk == pl.num_programs(2) - 1
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_q[...] = jnp.zeros_like(acc_q)
+        acc_k[...] = jnp.zeros_like(acc_k)
+        acc_v[...] = jnp.zeros_like(acc_v)
+
+    x = x_ref[...]  # one VMEM load feeds all three MAC chains (Alg. 9)
+    acc_q[...] += jnp.dot(x, wq_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j < nkv_blocks)
+    def _kv():
+        acc_k[...] += jnp.dot(x, wk_ref[...],
+                              preferred_element_type=jnp.float32)
+        acc_v[...] += jnp.dot(x, wv_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        q_ref[...] = acc_q[...].astype(q_ref.dtype)
+
+    @pl.when(last & (j < nkv_blocks))
+    def _flush_kv():
+        k_ref[...] = acc_k[...].astype(k_ref.dtype)
+        v_ref[...] = acc_v[...].astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def qkv_proj(x: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array, *,
+             bm: int = 512, bk: int = 512, bn: int = 256,
+             interpret: bool = False
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [M, D]; wq: [D, Nq]; wk/wv: [D, Nkv] (Nkv <= Nq, GQA).
+
+    Returns (q [M, Nq], k [M, Nkv], v [M, Nkv]).
+    """
+    M, D = x.shape
+    Nq, Nkv = wq.shape[1], wk.shape[1]
+    assert wv.shape[1] == Nkv and wk.shape[0] == D and wv.shape[0] == D
+    bm, bk = min(bm, _rup(M, 8)), min(bk, _rup(D, 8))
+    bn = min(bn, _rup(min(Nq, Nkv), 8))
+    Mp, Dp = _rup(M, bm), _rup(D, bk)
+    Nqp, Nkvp = _rup(Nq, bn), _rup(Nkv, bn)
+    x = jnp.pad(x, ((0, Mp - M), (0, Dp - D)))
+    wq = jnp.pad(wq, ((0, Dp - D), (0, Nqp - Nq)))
+    wk = jnp.pad(wk, ((0, Dp - D), (0, Nkvp - Nkv)))
+    wv = jnp.pad(wv, ((0, Dp - D), (0, Nkvp - Nkv)))
+    nkv_blocks = Nkvp // bn
+    kv_map = lambda i, j, k: (k, jnp.minimum(j, nkv_blocks - 1))
+    kv_out_map = lambda i, j, k: (i, jnp.minimum(j, nkv_blocks - 1))
+    q, k, v = pl.pallas_call(
+        functools.partial(_qkv_kernel, nkv_blocks),
+        grid=(Mp // bm, Nqp // bn, Dp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+                  pl.BlockSpec((bk, bn), kv_map),
+                  pl.BlockSpec((bk, bn), kv_map)],
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bm, bn), kv_out_map),
+                   pl.BlockSpec((bm, bn), kv_out_map)],
+        out_shape=[jax.ShapeDtypeStruct((Mp, Nqp), x.dtype),
+                   jax.ShapeDtypeStruct((Mp, Nkvp), x.dtype),
+                   jax.ShapeDtypeStruct((Mp, Nkvp), x.dtype)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32) for _ in range(3)],
+        interpret=interpret,
+    )(x, wq, wk, wv)
+    return q[:M, :Nq], k[:M, :Nkv], v[:M, :Nkv]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m

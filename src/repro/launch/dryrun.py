@@ -1,0 +1,438 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the host
+# device count at first backend initialization, and the production meshes
+# below need 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each applicable cell this driver:
+  1. builds the model + abstract (ShapeDtypeStruct) state — no allocation,
+  2. jits the real step (train_step with AdamW update / prefill / decode)
+     with in/out shardings from the DP/TP/EP strategy,
+  3. ``.lower().compile()`` against the 16x16 single-pod mesh and the
+     2x16x16 multi-pod mesh,
+  4. records memory_analysis / cost_analysis / parsed collective bytes to
+     ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Failures here (sharding mismatch, unsupported collective) are bugs.
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES_BY_NAME, cell_is_applicable
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.analytical import (V5E, model_flops, roofline,
+                                   scan_undercount_correction,
+                                   train_multiplier)
+from repro.distributed import sharding as shd
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh, mesh_device_count
+from repro.models import backend
+from repro.models.attention import KVCache, MLACache
+from repro.models.model import Model, ModelOptions
+from repro.models.rglru import LRUState
+from repro.models.ssm import SSMState
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (TrainStepConfig, abstract_state,
+                                       batch_shardings, make_step_fn,
+                                       state_shardings)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3|f8e5m2)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum wire bytes of every collective op in optimized HLO.
+
+    Per-op heuristic on the *per-device* result shapes in the SPMD module:
+      all-reduce         ring RS+AG      -> 2x result bytes
+      all-gather         (n-1)/n x out   -> ~1x result bytes
+      reduce-scatter     (n-1) x out     -> input ~= out x n; count in
+      all-to-all         1x result bytes
+      collective-permute 1x result bytes
+    """
+    totals: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(r"^\s*(" + "|".join(_COLLECTIVES)
+                       + r")(-start)?\(")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        _, rvalue = stripped.split(" = ", 1)
+        # rvalue: "<result shapes> <op-name>(operands), attrs"
+        m = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(",
+                      rvalue)
+        if not m or m.group(2) == "-done":  # count start, skip done
+            continue
+        op = m.group(1)
+        head = rvalue[: m.start()]          # result shapes only
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        group = re.search(r"replica_groups=\{\{([0-9,]+)\}", stripped)
+        n_group = len(group.group(1).split(",")) if group else 0
+        if not n_group:
+            g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", stripped)
+            n_group = int(g2.group(2)) if g2 else 2
+        if op == "all-reduce":
+            wire = 2.0 * nbytes * (n_group - 1) / max(n_group, 1)
+        elif op == "all-gather":
+            wire = nbytes * (n_group - 1) / max(n_group, 1)
+        elif op == "reduce-scatter":
+            wire = nbytes * (n_group - 1)
+        else:
+            wire = float(nbytes)
+        totals[op] += wire
+        counts[op] += 1
+    totals["total_per_device"] = sum(totals[k] for k in _COLLECTIVES)
+    totals["op_counts"] = counts  # type: ignore[assignment]
+    return totals
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode cells)
+# ---------------------------------------------------------------------------
+def _div(mesh: Mesh, axes, size: int):
+    if axes is None:
+        return None
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    ax = tuple(a for a in ax if a in mesh.shape)
+    if not ax:
+        return None
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    if n == 0 or size % n:
+        return None
+    return ax[0] if len(ax) == 1 else ax
+
+
+def cache_shardings(cfg: ArchConfig, cache, mesh: Mesh,
+                    strategy: shd.ShardingStrategy,
+                    opt: frozenset = frozenset()):
+    dp = tuple(a for a in strategy.dp_axes if a in mesh.shape)
+    tp = strategy.tp_axis
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def kv_specs(kv_size: int, hd_size: int):
+        """kv-head spec + head-dim spec.  'kvhd' opt: when the kv-head
+        count doesn't divide the TP axis (qwen2: 8 kv over 16), shard the
+        head_dim instead of replicating the whole cache TP-ways."""
+        kv_spec = _div(mesh, tp, kv_size)
+        hd_spec = None
+        if kv_spec is None and "kvhd" in opt:
+            hd_spec = _div(mesh, tp, hd_size)
+        return kv_spec, hd_spec
+
+    def kv_stacked(c: KVCache):  # [L,B,S,kv,hd]
+        s = c.k.shape
+        kv_spec, hd_spec = kv_specs(s[3], s[4])
+        spec = ns(None, _div(mesh, dp, s[1]), None, kv_spec, hd_spec)
+        return KVCache(spec, spec)
+
+    def kv_window(c: KVCache):  # [B,w,kv,hd]
+        s = c.k.shape
+        kv_spec, hd_spec = kv_specs(s[2], s[3])
+        sp = ns(_div(mesh, dp, s[0]), None, kv_spec, hd_spec)
+        return KVCache(sp, sp)
+
+    if cfg.family == "ssm":
+        conv, h = cache  # [L,B,k,d], [L,B,d,n]
+        return SSMState(
+            ns(None, _div(mesh, dp, conv.shape[1]), None,
+               _div(mesh, tp, conv.shape[3])),
+            ns(None, _div(mesh, dp, h.shape[1]),
+               _div(mesh, tp, h.shape[2]), None))
+    if cfg.mla is not None:
+        return MLACache(
+            ns(None, _div(mesh, dp, cache.c_kv.shape[1]), None, None),
+            ns(None, _div(mesh, dp, cache.k_rope.shape[1]), None, None))
+    if cfg.family == "hybrid":
+        out = []
+        for st in cache:
+            if isinstance(st, LRUState):  # conv [B,k,w], h [B,w]
+                out.append(LRUState(
+                    ns(_div(mesh, dp, st.conv.shape[0]), None,
+                       _div(mesh, tp, st.conv.shape[2])),
+                    ns(_div(mesh, dp, st.h.shape[0]),
+                       _div(mesh, tp, st.h.shape[1]))))
+            else:
+                out.append(kv_window(st))
+        return out
+    if cfg.encdec is not None:
+        return {"self": kv_stacked(cache["self"]),
+                "cross": kv_stacked(cache["cross"])}
+    return kv_stacked(cache)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               remat: str = "full", unroll: bool = True,
+               opt: frozenset = frozenset()):
+    """Returns (lowered, n_chips).  Raises on sharding bugs.
+
+    ``unroll=True`` emits straight-line layers so cost_analysis is exact
+    (a lax.scan body is counted once, not x trip-count); ``unroll=False``
+    is the production form (compact HLO, realistic buffer assignment) —
+    used for the memory pass and the multi-pod pass/fail check.
+
+    ``opt`` selects beyond-baseline §Perf variants:
+      'sp'    sequence-parallel residual stream (RS+AG collectives)
+      'int8'  int8 serving weights (paper C6 at deployment)
+      'kvhd'  shard the KV-cache head_dim when kv-heads don't divide TP
+      'dots'  remat policy: save matmul outputs (no dispatch recompute)
+      'gqa'   grouped GQA decode contraction (no repeat_kv cache copy)
+      'nofsdp' turn off FSDP param sharding for train
+    """
+    strategy = shd.strategy_for_mesh(
+        mesh, fsdp=(shape.kind == "train" and "nofsdp" not in opt),
+        sp="sp" in opt)
+    if "dots" in opt:
+        remat = "dots"
+    opts = ModelOptions(remat=remat if shape.kind == "train" else "none",
+                        unroll_layers=unroll, grouped_gqa="gqa" in opt)
+    model = Model(cfg, opts)
+
+    def params_trio():
+        """(abstract, axes) trees, int8-quantized under the 'int8' opt."""
+        abstract, axes = model.abstract(), model.axes()
+        if "int8" in opt and shape.kind != "train":
+            from repro.core.serve_quant import quantize_abstract, quantize_axes
+            return quantize_abstract(abstract), quantize_axes(axes, abstract)
+        return abstract, axes
+    specs = inp.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype=jnp.bfloat16 if cfg.param_count() > 1e11
+            else jnp.float32)
+        step_cfg = TrainStepConfig(optimizer=opt_cfg, donate=True)
+        st_sh = state_shardings(model, mesh, strategy)
+        b_sh = batch_shardings(mesh, strategy, specs)
+        raw = make_step_fn(model, step_cfg)
+
+        def wrapped(state, batch):
+            with shd.active(mesh, strategy):
+                return raw(state, batch)
+
+        jitted = jax.jit(wrapped, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, NamedSharding(mesh, P())),
+                         donate_argnums=(0,))
+        with backend.faithful():
+            lowered = jitted.lower(abstract_state(model, opt_cfg), specs)
+    elif shape.kind == "prefill":
+        abstract, axes = params_trio()
+        p_sh = shd.tree_param_shardings(mesh, axes, abstract, strategy)
+        b_sh = batch_shardings(mesh, strategy, specs)
+        logits_sh = NamedSharding(mesh, P(
+            tuple(a for a in strategy.dp_axes if a in mesh.shape), None,
+            _div(mesh, strategy.tp_axis, cfg.vocab_size)))
+        cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                     abstract=True)
+        c_sh = cache_shardings(cfg, cache_abs, mesh, strategy, opt)
+
+        def prefill(params, batch):
+            with shd.active(mesh, strategy):
+                return model.prefill(params, batch, max_len=shape.seq_len)
+
+        jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logits_sh, c_sh))
+        with backend.faithful():
+            lowered = jitted.lower(abstract, specs)
+    else:  # decode
+        abstract, axes = params_trio()
+        p_sh = shd.tree_param_shardings(mesh, axes, abstract, strategy)
+        cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                     abstract=True)
+        c_sh = cache_shardings(cfg, cache_abs, mesh, strategy, opt)
+        dp = tuple(a for a in strategy.dp_axes if a in mesh.shape)
+        tok_sh = NamedSharding(mesh, P(
+            _div(mesh, dp, shape.global_batch), None))
+        idx_sh = NamedSharding(mesh, P(_div(mesh, dp, shape.global_batch)))
+        logits_sh = NamedSharding(mesh, P(
+            _div(mesh, dp, shape.global_batch), None,
+            _div(mesh, strategy.tp_axis, cfg.vocab_size)))
+
+        def decode(params, cache, tokens, cache_index):
+            with shd.active(mesh, strategy):
+                return model.decode_step(params, cache, tokens, cache_index)
+
+        jitted = jax.jit(decode,
+                         in_shardings=(p_sh, c_sh, tok_sh, idx_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(1,))
+        with backend.faithful():
+            lowered = jitted.lower(
+                abstract, cache_abs, specs["tokens"],
+                specs["cache_index"])
+    return lowered, mesh_device_count(mesh)
+
+
+def run_cell(cfg: ArchConfig, shape: ShapeSpec, mesh_kind: str,
+             out_dir: str, force: bool = False,
+             opt: frozenset = frozenset()) -> dict:
+    name = f"{cfg.name}__{shape.name}__{mesh_kind}"
+    if opt:
+        name += "__opt-" + "-".join(sorted(opt))
+    path = os.path.join(out_dir, name.replace("/", "_") + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    rec: dict = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_kind,
+                 "opt": sorted(opt)}
+    try:
+        mesh = make_production_mesh(multi_pod=mesh_kind == "multi")
+        ok, why = cell_is_applicable(cfg, shape)
+        if not ok:
+            rec.update(status="skipped", reason=why)
+        else:
+            # multi-pod: production (scanned) form; proving lower+compile
+            # on the pod axis is the requirement, and compiles ~10x faster.
+            unroll = mesh_kind == "single"
+            lowered, n_chips = lower_cell(cfg, shape, mesh, unroll=unroll,
+                                          opt=opt)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            def mem_fields(comp):
+                try:
+                    ma = comp.memory_analysis()
+                    return {k: getattr(ma, k) for k in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes",
+                        "alias_size_in_bytes") if hasattr(ma, k)}
+                except Exception as e:  # CPU backend may not implement it
+                    return {"error": str(e)}
+
+            ca = compiled.cost_analysis() or {}
+            mem = mem_fields(compiled)
+            if unroll:
+                # memory realism pass: the production (scan) form is what
+                # actually runs; its buffer assignment is the honest
+                # per-device footprint
+                try:
+                    scan_lowered, _ = lower_cell(cfg, shape, mesh,
+                                                 unroll=False, opt=opt)
+                    rec["memory_analysis_scan"] = mem_fields(
+                        scan_lowered.compile())
+                except Exception as e:
+                    rec["memory_analysis_scan"] = {"error": str(e)}
+            coll = collective_bytes(compiled.as_text())
+            # cost_analysis is for the per-device SPMD module -> scale up
+            flops = float(ca.get("flops", 0.0)) * n_chips
+            bytes_hbm = float(ca.get("bytes accessed", 0.0)) * n_chips
+            corr = scan_undercount_correction(cfg, shape)
+            if shape.kind == "train":
+                corr *= train_multiplier()
+            flops += corr
+            mf = model_flops(cfg, shape)
+            rl = roofline(flops, bytes_hbm,
+                          coll["total_per_device"] * n_chips, n_chips, V5E)
+            rec["scan_flops_correction"] = corr
+            rec.update(
+                status="ok", n_chips=n_chips,
+                lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                cost_analysis={k: ca[k] for k in sorted(ca)
+                               if isinstance(ca[k], (int, float))},
+                memory_analysis=mem,
+                collectives=coll,
+                hlo_flops=flops, hlo_bytes=bytes_hbm,
+                model_flops=mf,
+                model_over_hlo=round(mf / flops, 4) if flops else None,
+                roofline={
+                    "t_compute_s": rl.t_compute, "t_memory_s": rl.t_memory,
+                    "t_collective_s": rl.t_collective,
+                    "dominant": rl.dominant,
+                    "compute_fraction": round(rl.compute_fraction, 4),
+                },
+            )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec.get("status")
+    extra = rec.get("reason") or rec.get("error", "")
+    print(f"[{rec['wall_s']:7.1f}s] {name}: {status} {extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated perf variants: sp,int8,kvhd,"
+                         "dots,nofsdp (records go to --out)")
+    args = ap.parse_args()
+    opt = frozenset(o for o in args.opt.split(",") if o)
+
+    archs = list(ASSIGNED) if (args.all or not args.arch) \
+        else [REGISTRY[args.arch]]
+    shapes = list(SHAPES_BY_NAME.values()) if (args.all or not args.shape) \
+        else [SHAPES_BY_NAME[args.shape]]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for c in archs:
+            for s in shapes:
+                ok, why = cell_is_applicable(c, s)
+                print(f"{c.name:24s} {s.name:12s} "
+                      f"{'RUN' if ok else why}")
+        return
+
+    n_ok = n_fail = 0
+    for mesh_kind in meshes:
+        for c in archs:
+            for s in shapes:
+                rec = run_cell(c, s, mesh_kind, args.out, args.force,
+                               opt=opt)
+                if rec.get("status") == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"done: {n_ok} ok/skipped, {n_fail} errors", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,399 @@
+"""Attention variants: GQA (full / blockwise / local-window) and MLA.
+
+The paper's QK_PM -> softmax -> SV_PM pipeline (§3.6) appears here in three
+forms:
+
+* ``full_attention``       — direct einsum chain, used for short sequences;
+  this is the literal Algorithm 11/7/12 composition.
+* ``blockwise_attention``  — query-block streamed attention with the score
+  rows never exceeding one block: the TPU analogue of the paper's tiled
+  BRAM reuse (scores stay "on chip" per tile).  Used for long sequences on
+  the XLA path; the Pallas ``flash_attention`` kernel is the TPU-native
+  fusion of the same pipeline.
+* ``local_attention``      — banded window attention (RecurrentGemma).
+
+MLA (DeepSeek-V3) keeps the paper's dense-matmul discipline: every
+projection routes through ``layers.dense`` and is therefore tiled by the
+same machinery.  Decode uses the *absorbed* formulation so the per-step
+cost scales with the latent width, not the expanded head dims.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.layers import apply_rope, build_dense, apply_dense
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+# Sequences at or above this length use blockwise (streamed) attention on
+# the XLA path; below it the direct einsum chain is cheaper to compile.
+BLOCKWISE_THRESHOLD = 8_192
+QUERY_BLOCK = 1_024
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for one attention stack: [B, S_max, n_kv, hd]."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, kv, hd] -> [B, S, kv*n_rep, hd] (GQA head grouping)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+        .reshape(b, s, kv * n_rep, hd)
+
+
+def _causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """[q_len, kv_len] bool; q position i (global i+q_offset) sees kv <= it."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, q_offset=0,
+                   kv_len_mask: jax.Array | None = None,
+                   scale: float | None = None) -> jax.Array:
+    """q: [B,Sq,h,hd], k/v: [B,Skv,kv,hd] (kv already repeated to h)."""
+    b, sq, h, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s = jnp.where(_causal_mask(sq, k.shape[1], q_offset)[None, None], s, NEG_INF)
+    if kv_len_mask is not None:  # [B, Skv] live-position mask (decode / padding)
+        s = jnp.where(kv_len_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        query_block: int = QUERY_BLOCK,
+                        scale: float | None = None) -> jax.Array:
+    """Query-block streamed attention: peak score memory B*h*Qb*Skv.
+
+    XLA-level flash attention — the same tiling Fig. 4 applies to weight
+    matrices, applied to the score matrix.  Exact (not approximate).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    vd = v.shape[-1]  # MLA: value head dim differs from qk head dim
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nb = -(-sq // query_block)
+    pad = nb * query_block - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nb, query_block, h, hd).transpose(1, 0, 2, 3, 4)
+
+    kv_pos = jnp.arange(skv)
+
+    def one_block(carry, inp):
+        qi, block_idx = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32) * scale
+        if causal:
+            q_pos = block_idx * query_block + jnp.arange(query_block)
+            m = kv_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+        return carry, o
+
+    _, ob = jax.lax.scan(one_block, None, (qb, jnp.arange(nb)))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(b, nb * query_block, h, vd)
+    return out[:, :sq]
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, window: int, *,
+                    scale: float | None = None) -> jax.Array:
+    """Causal banded attention: position i attends to (i-window, i].
+
+    Implemented block-wise (block = window): each query block attends to its
+    own and the previous key block, so memory is B*h*S*2W, never S^2.
+    """
+    b, s, h, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    w = min(window, s)
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = nb * w
+    qb = q.reshape(b, nb, w, h, hd)
+    kb = k.reshape(b, nb, w, h, hd)
+    vb = v.reshape(b, nb, w, h, hd)
+    # keys for block i: blocks (i-1, i); block -1 is zeros and fully masked.
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # [b, nb, 2w, h, hd]
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    sc = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, k2).astype(jnp.float32) * scale
+    q_pos = jnp.arange(w)[:, None] + w                    # within the 2w frame
+    kv_pos = jnp.arange(2 * w)[None, :]
+    m = (kv_pos <= q_pos) & (kv_pos > q_pos - w)          # (i-w, i]
+    first = (jnp.arange(nb) == 0)[:, None, None]          # block -1 is invalid
+    m = m[None] & (~first | (kv_pos[None] >= w))
+    sc = jnp.where(m[:, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    ob = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(v2.dtype), v2)
+    return ob.reshape(b, sp, h, hd)[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# ---------------------------------------------------------------------------
+def build_gqa(b, cfg: ArchConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": build_dense(b, d, h * hd, ("embed", "heads"), use_bias=cfg.qkv_bias),
+        "wk": build_dense(b, d, kv * hd, ("embed", "kv_heads"), use_bias=cfg.qkv_bias),
+        "wv": build_dense(b, d, kv * hd, ("embed", "kv_heads"), use_bias=cfg.qkv_bias),
+        "wo": build_dense(b, h * hd, d, ("heads", "embed")),
+    }
+
+
+def gqa_qkv(x: jax.Array, p: dict, cfg: ArchConfig, positions: jax.Array,
+            rope: bool = True) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b_, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = apply_dense(x, p["wq"]).reshape(b_, s, h, hd)
+    k = apply_dense(x, p["wk"]).reshape(b_, s, kv, hd)
+    v = apply_dense(x, p["wv"]).reshape(b_, s, kv, hd)
+    if rope and cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def gqa_attention(x: jax.Array, p: dict, cfg: ArchConfig, *,
+                  positions: jax.Array, causal: bool = True,
+                  window: int | None = None) -> jax.Array:
+    """Full-sequence (train / prefill) GQA attention."""
+    b_, s, _ = x.shape
+    q, k, v = gqa_qkv(x, p, cfg, positions)
+    n_rep = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    if window is not None and s > window:
+        o = local_attention(q, k, v, window)
+    elif s >= BLOCKWISE_THRESHOLD:
+        o = blockwise_attention(q, k, v, causal=causal)
+    else:
+        o = full_attention(q, k, v, causal=causal)
+    o = o.reshape(b_, s, cfg.num_heads * cfg.resolved_head_dim)
+    return apply_dense(o, p["wo"])
+
+
+def gqa_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
+                positions: jax.Array, max_len: int,
+                window: int | None = None,
+                causal: bool = True) -> tuple[jax.Array, KVCache]:
+    """Full-sequence attention that also emits this layer's decode cache."""
+    b_, s, _ = x.shape
+    q, k, v = gqa_qkv(x, p, cfg, positions)
+    n_rep = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    kf, vf = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    if window is not None and s > window:
+        o = local_attention(q, kf, vf, window)
+    elif s >= BLOCKWISE_THRESHOLD:
+        o = blockwise_attention(q, kf, vf, causal=causal)
+    else:
+        o = full_attention(q, kf, vf, causal=causal)
+    o = apply_dense(o.reshape(b_, s, cfg.num_heads * cfg.resolved_head_dim),
+                    p["wo"])
+    if window is not None:
+        # rolling buffer: row (p % window) holds token p, for the last W tokens
+        w = min(window, max_len)
+        start = max(s - w, 0)
+        rows = (jnp.arange(start, start + w) % w) if s >= w else jnp.arange(w)
+        src = k[:, start:start + w], v[:, start:start + w]
+        ck = jnp.zeros((b_, w) + k.shape[2:], jnp.bfloat16)
+        cv = jnp.zeros_like(ck)
+        n_src = src[0].shape[1]
+        ck = ck.at[:, rows[:n_src]].set(src[0].astype(jnp.bfloat16))
+        cv = cv.at[:, rows[:n_src]].set(src[1].astype(jnp.bfloat16))
+        return o, KVCache(ck, cv)
+    pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+    return o, KVCache(jnp.pad(k.astype(jnp.bfloat16), pad),
+                      jnp.pad(v.astype(jnp.bfloat16), pad))
+
+
+def mla_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
+                positions: jax.Array, max_len: int
+                ) -> tuple[jax.Array, MLACache]:
+    """MLA prefill: attention output + this layer's latent cache."""
+    m = cfg.mla
+    b_, s, _ = x.shape
+    o = mla_attention(x, p, cfg, positions=positions)
+    c_kv, k_rope = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    pad = ((0, 0), (0, max_len - s), (0, 0))
+    return o, MLACache(jnp.pad(c_kv.astype(jnp.bfloat16), pad),
+                       jnp.pad(k_rope.astype(jnp.bfloat16), pad))
+
+
+def as_index_vector(cache_index: jax.Array, batch: int) -> jax.Array:
+    """Scalar or [B] cache index -> [B] int32 (per-slot decode support)."""
+    idx = jnp.asarray(cache_index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (batch,))
+    return idx
+
+
+def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
+               cache_index: jax.Array, *,
+               window: int | None = None,
+               grouped: bool = False) -> tuple[jax.Array, KVCache]:
+    """One-token decode against a [B, S_max, kv, hd] cache.
+
+    ``cache_index`` is the number of tokens already in the cache — a
+    scalar, or a [B] vector for per-slot serving (continuous batching).
+    For windowed layers the cache is a rolling buffer of size window.
+    ``grouped``: GQA-grouped score contraction (no repeat_kv copy).
+    """
+    b_, one, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    idx_vec = as_index_vector(cache_index, b_)
+    positions = idx_vec[:, None]
+    q, k_new, v_new = gqa_qkv(x, p, cfg, positions)
+    s_max = cache.k.shape[1]
+    slot = idx_vec % s_max if window is not None else idx_vec
+    rows = jnp.arange(b_)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    idx = jnp.arange(s_max)
+    if window is not None:  # rolling-buffer validity, per slot
+        live = (idx[None, :] <= slot[:, None]) | (idx_vec[:, None] >= s_max)
+    else:
+        live = idx[None, :] <= idx_vec[:, None]
+    n_rep = h // max(kv, 1)
+    if grouped:
+        # GQA-grouped contraction: the KV cache is used directly, never
+        # materialized at h heads (repeat_kv costs ~2x cache bytes/layer)
+        qg = q.reshape(b_, one, kv, n_rep, hd)
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+        s = s / math.sqrt(hd)
+        s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkrqs,bskd->bqkrd", pr.astype(v.dtype), v)
+        o = o.reshape(b_, one, h * hd)
+    else:
+        kf, vf = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+        o = full_attention(q, kf, vf, causal=False, kv_len_mask=live)
+        o = o.reshape(b_, one, h * hd)
+    return apply_dense(o, p["wo"]), KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    """Latent cache: the compressed kv + shared rope key (paper-faithful MLA)."""
+
+    c_kv: jax.Array    # [B, S_max, kv_lora]
+    k_rope: jax.Array  # [B, S_max, rope_dim]
+
+
+def build_mla(b, cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "q_down": build_dense(b, d, m.q_lora_rank, ("embed", "q_lora")),
+        "q_norm": {"scale": b.param((m.q_lora_rank,), ("q_lora",), init="ones")},
+        "q_up": build_dense(b, m.q_lora_rank, h * m.qk_head_dim, ("q_lora", "heads")),
+        "kv_down": build_dense(b, d, m.kv_lora_rank + m.qk_rope_head_dim,
+                               ("embed", "kv_lora")),
+        "kv_norm": {"scale": b.param((m.kv_lora_rank,), ("kv_lora",), init="ones")},
+        "k_up": build_dense(b, m.kv_lora_rank, h * m.qk_nope_head_dim,
+                            ("kv_lora", "heads")),
+        "v_up": build_dense(b, m.kv_lora_rank, h * m.v_head_dim,
+                            ("kv_lora", "heads")),
+        "wo": build_dense(b, h * m.v_head_dim, d, ("heads", "embed")),
+    }
+
+
+def _mla_q(x, p, m: MLAConfig, h: int, positions, theta):
+    b_, s, _ = x.shape
+    cq = layers.rmsnorm(apply_dense(x, p["q_down"]), p["q_norm"]["scale"])
+    q = apply_dense(cq, p["q_up"]).reshape(b_, s, h, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(x, p, m: MLAConfig, positions, theta):
+    b_, s, _ = x.shape
+    ckv_full = apply_dense(x, p["kv_down"])
+    c_kv = layers.rmsnorm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope = ckv_full[..., m.kv_lora_rank:].reshape(b_, s, 1, m.qk_rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(x: jax.Array, p: dict, cfg: ArchConfig, *,
+                  positions: jax.Array) -> jax.Array:
+    """Train/prefill MLA: expand latents to per-head K/V (naive path)."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, s, _ = x.shape
+    q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
+    c_kv, k_rope = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    k_nope = apply_dense(c_kv, p["k_up"]).reshape(b_, s, h, m.qk_nope_head_dim)
+    v = apply_dense(c_kv, p["v_up"]).reshape(b_, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None], (b_, s, h, m.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    if s >= BLOCKWISE_THRESHOLD:
+        o = blockwise_attention(q, k, v, causal=True, scale=scale)
+    else:
+        o = full_attention(q, k, v, causal=True, scale=scale)
+    return apply_dense(o.reshape(b_, s, h * m.v_head_dim), p["wo"])
+
+
+def mla_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
+               cache_index: jax.Array) -> tuple[jax.Array, MLACache]:
+    """Absorbed-matmul MLA decode: score and value contraction happen in the
+    latent space, so per-step FLOPs/bytes scale with kv_lora_rank."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, one, _ = x.shape
+    idx_vec = as_index_vector(cache_index, b_)
+    positions = idx_vec[:, None]
+    q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
+    c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    rows = jnp.arange(b_)
+    c_kv = cache.c_kv.at[rows, idx_vec].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[rows, idx_vec].set(
+        kr_new[:, 0].astype(cache.k_rope.dtype))
+    s_max = c_kv.shape[1]
+    live = (jnp.arange(s_max)[None] <= idx_vec[:, None])[:, None, None, :]
+
+    wk = p["k_up"]["kernel"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    # absorb k_up into the query: q_lat [B,1,h,kv_lora] (f32: one token only)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    s_lat = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) / math.sqrt(m.qk_head_dim)
+    scores = jnp.where(live, scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    # attend in latent space, then expand once per step via v_up
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", pr.astype(c_kv.dtype), c_kv)
+    wv = jnp.transpose(p["v_up"]["kernel"].reshape(m.kv_lora_rank, h, m.v_head_dim),
+                       (1, 0, 2)).astype(x.dtype)
+    o = jnp.einsum("bqhl,hld->bqhd", o_lat, wv)
+    out = apply_dense(o.reshape(b_, one, h * m.v_head_dim), p["wo"])
+    return out, MLACache(c_kv, k_rope)

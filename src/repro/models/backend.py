@@ -1,0 +1,73 @@
+"""Matmul backend switch: XLA dot vs the ADAPTOR Pallas tiled kernel.
+
+Three modes, selected with context managers:
+
+* default        — CPU-safe execution: bf16 operands are upcast to f32
+  (the CPU DotThunk cannot execute some fused bf16 x bf16 -> f32 dots).
+  Numerically this *over*-delivers on the TPU semantics (full f32 path).
+* ``faithful()`` — bf16-in / f32-accumulate via ``preferred_element_type``,
+  the exact TPU MXU contract.  Used by the multi-pod dry-run so the
+  lowered HLO carries true bf16 operand bytes for the roofline analysis
+  (it is never executed on CPU).
+* ``use('pallas')`` — route through the ADAPTOR tiled Pallas kernel
+  (validated in interpret mode on CPU; the deployment path on TPU).
+
+This mirrors the paper's split between the HLS behavioural C model
+(C simulation) and the synthesized RTL.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+def _impl() -> str:
+    return getattr(_state, "impl", "xla")
+
+
+def _faithful() -> bool:
+    return getattr(_state, "faithful", False)
+
+
+@contextlib.contextmanager
+def use(impl: str) -> Iterator[None]:
+    """Context manager selecting the matmul implementation: 'xla' | 'pallas'."""
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {impl!r}")
+    old = _impl()
+    _state.impl = impl
+    try:
+        yield
+    finally:
+        _state.impl = old
+
+
+@contextlib.contextmanager
+def faithful() -> Iterator[None]:
+    """bf16-in/f32-accumulate HLO (TPU contract); lower-only on CPU."""
+    old = _faithful()
+    _state.faithful = True
+    try:
+        yield
+    finally:
+        _state.faithful = old
+
+
+def matmul(x, w):
+    """y[..., n] = sum_k x[..., k] w[k, n], bf16-in / f32-accumulate."""
+    if _impl() == "pallas":
+        from repro.kernels import ops
+
+        return ops.tiled_matmul(x, w)
+    if _faithful() or jax.default_backend() != "cpu":
+        return jnp.matmul(x, w,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    # CPU-safe execution path: full f32 (DotThunk bf16 limitation)
+    return jnp.matmul(x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

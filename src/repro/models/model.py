@@ -1,0 +1,685 @@
+"""The model zoo facade: one ``Model`` class interpreting any ArchConfig.
+
+Families: dense / vlm (dense + stub patch embeddings) / moe (+MLA, MTP) /
+ssm (mamba-1) / hybrid (RG-LRU + local attention) / audio (whisper enc-dec,
+stub frame embeddings) / encoder (the paper's own BERT-style networks).
+
+Layout discipline:
+* Homogeneous layer stacks are *stacked* (leading layer dim) and driven by
+  ``lax.scan`` — compact HLO at 80 layers, remat-friendly.
+* Heterogeneous stacks (hybrid pattern, MoE dense prefix) unroll in Python.
+* Every parameter is created through ``ParamBuilder`` so the same code
+  yields real arrays, ShapeDtypeStructs (dry-run) or logical
+  PartitionSpecs (sharding) — ADAPTOR's synthesis/runtime split.
+
+Decode: ``init_cache`` + ``decode_step`` implement one-new-token serving
+with per-family state (KV / MLA latent / SSM / rolling window).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers, moe, rglru, ssm
+from repro.models.attention import KVCache, MLACache
+from repro.models.params import ParamBuilder
+
+
+def _is_causal(cfg: ArchConfig) -> bool:
+    return cfg.family != "encoder"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    """Build-time execution options (the 'synthesis parameters')."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "none"  # none | full  (per-layer rematerialization)
+    mtp_loss_weight: float = 0.3
+    moe_aux_weight: float = 0.01
+    # Unroll layer stacks into straight-line HLO instead of lax.scan.
+    # Needed by the dry-run: XLA's cost_analysis counts a while-loop body
+    # once, not x trip-count, so scanned-layer FLOPs/bytes/collectives
+    # would be undercounted by ~num_layers.
+    unroll_layers: bool = False
+    # Decode attention: GQA-grouped contraction (no repeat_kv copy of the
+    # KV cache to the full head count) — §Perf optimization.
+    grouped_gqa: bool = False
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, options: ModelOptions | None = None):
+        self.cfg = cfg
+        self.opt = options or ModelOptions()
+
+    # ------------------------------------------------------------------
+    # Parameter construction (init / abstract / axes via ParamBuilder)
+    # ------------------------------------------------------------------
+    def build(self, b: ParamBuilder) -> dict:
+        cfg = self.cfg
+        p: dict[str, Any] = {"embed": layers.build_embedding(b, cfg.vocab_size,
+                                                             cfg.d_model)}
+        if cfg.positional == "learned":
+            p["pos_embed"] = {"table": b.param(
+                (cfg.max_position_embeddings, cfg.d_model), ("pos", "embed"))}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"table": b.param(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+        p["final_norm"] = layers.build_norm(b, cfg.d_model, cfg.norm)
+
+        if cfg.family == "ssm":
+            with b.stacked(cfg.num_layers):
+                p["layers"] = self._build_ssm_layer(b)
+        elif cfg.family == "hybrid":
+            p["layers"] = [self._build_hybrid_layer(b, kind)
+                           for kind in self._hybrid_kinds()]
+        elif cfg.family == "moe":
+            k = cfg.moe.first_k_dense
+            if k:
+                dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.dense_d_ff)
+                p["dense_prefix"] = [self._build_dense_layer(b, dense_cfg)
+                                     for _ in range(k)]
+            with b.stacked(cfg.num_layers - k):
+                p["layers"] = self._build_moe_layer(b)
+            if cfg.num_mtp_modules:
+                p["mtp"] = self._build_mtp(b)
+        elif cfg.encdec is not None:
+            with b.stacked(cfg.encdec.num_encoder_layers):
+                p["enc_layers"] = self._build_dense_layer(b, cfg, causal=False)
+            with b.stacked(cfg.num_layers):
+                p["layers"] = self._build_cross_layer(b)
+            p["enc_final_norm"] = layers.build_norm(b, cfg.d_model, cfg.norm)
+            p["enc_pos_embed"] = {"table": b.param(
+                (cfg.encdec.encoder_seq_len, cfg.d_model), ("pos", "embed"))}
+        else:  # dense / vlm / encoder
+            with b.stacked(cfg.num_layers):
+                p["layers"] = self._build_dense_layer(b, cfg)
+        return p
+
+    def _build_attn(self, b, cfg: ArchConfig) -> dict:
+        if cfg.mla is not None:
+            return attn.build_mla(b, cfg)
+        return attn.build_gqa(b, cfg)
+
+    def _build_dense_layer(self, b, cfg: ArchConfig, causal: bool = True) -> dict:
+        use_bias = cfg.norm == "layernorm"  # paper-style FFN carries biases
+        return {
+            "ln1": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "attn": self._build_attn(b, cfg),
+            "ln2": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "ffn": moe.build_ffn(b, cfg, cfg.d_ff, use_bias=use_bias),
+        }
+
+    def _build_moe_layer(self, b) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "attn": self._build_attn(b, cfg),
+            "ln2": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "moe": moe.build_moe(b, cfg),
+        }
+
+    def _build_ssm_layer(self, b) -> dict:
+        cfg = self.cfg
+        return {"ln": layers.build_norm(b, cfg.d_model, cfg.norm),
+                "ssm": ssm.build_ssm(b, cfg)}
+
+    def _hybrid_kinds(self) -> list[str]:
+        pat = self.cfg.hybrid.pattern
+        return [pat[i % len(pat)] for i in range(self.cfg.num_layers)]
+
+    def _build_hybrid_layer(self, b, kind: str) -> dict:
+        cfg = self.cfg
+        p = {"ln1": layers.build_norm(b, cfg.d_model, cfg.norm),
+             "ln2": layers.build_norm(b, cfg.d_model, cfg.norm),
+             "ffn": moe.build_ffn(b, cfg, cfg.d_ff)}
+        if kind == "r":
+            p["rglru"] = rglru.build_rglru(b, cfg)
+        else:
+            p["attn"] = attn.build_gqa(b, cfg)
+        return p
+
+    def _build_cross_layer(self, b) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "attn": self._build_attn(b, cfg),
+            "ln_cross": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "cross": attn.build_gqa(b, cfg),
+            "ln2": layers.build_norm(b, cfg.d_model, cfg.norm),
+            "ffn": moe.build_ffn(b, cfg, cfg.d_ff,
+                                 use_bias=cfg.norm == "layernorm"),
+        }
+
+    def _build_mtp(self, b) -> dict:
+        cfg = self.cfg
+        return {"proj": layers.build_dense(b, 2 * cfg.d_model, cfg.d_model,
+                                           ("embed", "embed")),
+                "norm_h": layers.build_norm(b, cfg.d_model, cfg.norm),
+                "norm_e": layers.build_norm(b, cfg.d_model, cfg.norm),
+                "layer": self._build_moe_layer(b)}
+
+    def init(self, rng: jax.Array) -> dict:
+        return self.build(ParamBuilder("init", rng, self.opt.param_dtype))
+
+    def abstract(self) -> dict:
+        return self.build(ParamBuilder("abstract", dtype=self.opt.param_dtype))
+
+    def axes(self) -> dict:
+        return self.build(ParamBuilder("axes", dtype=self.opt.param_dtype))
+
+    # ------------------------------------------------------------------
+    # Layer bodies
+    # ------------------------------------------------------------------
+    def _maybe_remat(self, f):
+        if self.opt.remat == "full":
+            return jax.checkpoint(f)
+        if self.opt.remat == "dots":
+            # save matmul outputs: no recompute of attention/FFN/dispatch
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        return f
+
+    def _run_stack(self, body, x, stacked):
+        """Scan over stacked layer params, or unroll (dry-run mode).
+        ``body(x, layer_params) -> (x, None)``."""
+        if not self.opt.unroll_layers:
+            return jax.lax.scan(body, x, stacked)[0]
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda l: l[i], stacked))
+        return x
+
+    def _run_stack_cache(self, body, x, stacked, cache):
+        """Layer loop threading a per-layer cache; scan or unrolled."""
+        if not self.opt.unroll_layers:
+            return jax.lax.scan(body, x, (stacked, cache))
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, c = body(x, (jax.tree.map(lambda l: l[i], stacked),
+                            jax.tree.map(lambda l: l[i], cache)))
+            outs.append(c)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+
+    def _run_stack_collect(self, body, x, stacked):
+        """Layer loop collecting a per-layer output (prefill caches)."""
+        if not self.opt.unroll_layers:
+            return jax.lax.scan(body, x, stacked)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, c = body(x, jax.tree.map(lambda l: l[i], stacked))
+            outs.append(c)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+
+    def _dense_body(self, x, lp, positions, causal, window=None):
+        cfg = self.cfg
+        # re-pin the scan carry: GSPMD propagation through while loops
+        # otherwise drops the batch sharding (see DESIGN.md §7).  Under a
+        # sequence-parallel strategy "seq" resolves to the TP axis and the
+        # residual stream stays token-sharded between blocks (Megatron-SP:
+        # the TP all-reduce splits into reduce-scatter + bf16 all-gather).
+        x = constrain(x, ("batch", "seq", None))
+        h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+        if cfg.mla is not None:
+            h = attn.mla_attention(h, lp["attn"], cfg, positions=positions)
+        else:
+            h = attn.gqa_attention(h, lp["attn"], cfg, positions=positions,
+                                   causal=causal, window=window)
+        x = x + h
+        h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+        if "moe" in lp:
+            h = moe.apply_moe(h, lp["moe"], cfg)
+        else:
+            h = moe.apply_ffn(h, lp["ffn"], cfg.activation)
+        return x + h
+
+    def _ssm_body(self, x, lp):
+        x = constrain(x, ("batch", None, None))
+        h = layers.apply_norm(x, lp["ln"], self.cfg.norm)
+        return x + ssm.ssm_forward(h, lp["ssm"], self.cfg)
+
+    def _hybrid_body(self, x, lp, kind, positions):
+        cfg = self.cfg
+        x = constrain(x, ("batch", None, None))
+        h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+        if kind == "r":
+            h = rglru.rglru_forward(h, lp["rglru"], cfg)
+        else:
+            h = attn.gqa_attention(h, lp["attn"], cfg, positions=positions,
+                                   causal=True,
+                                   window=cfg.hybrid.attention_window)
+        x = x + h
+        h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+        return x + moe.apply_ffn(h, lp["ffn"], cfg.activation)
+
+    def _cross_body(self, x, lp, positions, enc_kv):
+        cfg = self.cfg
+        x = constrain(x, ("batch", None, None))
+        h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+        h = attn.gqa_attention(h, lp["attn"], cfg, positions=positions,
+                               causal=True)
+        x = x + h
+        h = layers.apply_norm(x, lp["ln_cross"], cfg.norm)
+        x = x + self._cross_attend(h, lp["cross"], enc_kv)
+        h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+        return x + moe.apply_ffn(h, lp["ffn"], cfg.activation)
+
+    def _cross_attend(self, h, cp, enc_kv):
+        """Cross-attention: queries from decoder, K/V precomputed from encoder."""
+        cfg = self.cfg
+        b_, s, _ = h.shape
+        hd = cfg.resolved_head_dim
+        q = layers.apply_dense(h, cp["wq"]).reshape(b_, s, cfg.num_heads, hd)
+        k, v = enc_kv
+        n_rep = cfg.num_heads // max(cfg.num_kv_heads, 1)
+        k, v = attn.repeat_kv(k, n_rep), attn.repeat_kv(v, n_rep)
+        o = attn.full_attention(q, k, v, causal=False)
+        return layers.apply_dense(o.reshape(b_, s, cfg.num_heads * hd), cp["wo"])
+
+    def _cross_kv(self, cp, enc_out):
+        cfg = self.cfg
+        b_, se, _ = enc_out.shape
+        hd = cfg.resolved_head_dim
+        k = layers.apply_dense(enc_out, cp["wk"]).reshape(b_, se, cfg.num_kv_heads, hd)
+        v = layers.apply_dense(enc_out, cp["wv"]).reshape(b_, se, cfg.num_kv_heads, hd)
+        return k, v
+
+    # ------------------------------------------------------------------
+    # Embedding / positions
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch, q_offset: int = 0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = layers.embed(tokens, params["embed"], self.opt.compute_dtype)
+        b_, s = tokens.shape
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :] + q_offset
+        if cfg.positional == "learned":
+            idx = jnp.minimum(positions, cfg.max_position_embeddings - 1)
+            x = x + params["pos_embed"]["table"].astype(x.dtype)[idx[0]][None]
+        if cfg.frontend is not None and cfg.encdec is None and "frontend" in batch:
+            # stub vision frontend: first num_tokens positions carry the
+            # precomputed patch embeddings (audio frontends feed the encoder)
+            fe = batch["frontend"].astype(x.dtype)
+            n = fe.shape[1]
+            mask = (jnp.arange(s) < n)[None, :, None]
+            fe_pad = jnp.pad(fe, ((0, 0), (0, max(s - n, 0)), (0, 0)))[:, :s]
+            x = jnp.where(mask, fe_pad, x)
+        return constrain(x, ("batch", None, None)), positions
+
+    def _unembed(self, params, x):
+        x = layers.apply_norm(x, params["final_norm"], self.cfg.norm)
+        table = params["embed"]["table"] if self.cfg.tie_embeddings \
+            else params["lm_head"]["table"]
+        logits = layers.unembed(x, {"table": table})
+        return constrain(logits, ("batch", None, "vocab"))
+
+    # ------------------------------------------------------------------
+    # Forward (train / prefill)
+    # ------------------------------------------------------------------
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """Full-sequence forward -> logits [B, S, vocab] (f32)."""
+        return self._unembed(params, self._backbone(params, batch))
+
+    def _backbone(self, params: dict, batch: dict) -> jax.Array:
+        """Embed + all layers -> pre-final-norm hidden states [B, S, d]."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        causal = _is_causal(cfg)
+
+        if cfg.family == "ssm":
+            body = self._maybe_remat(lambda h, lp: (self._ssm_body(h, lp), None))
+            x = self._run_stack(body, x, params["layers"])
+        elif cfg.family == "hybrid":
+            for lp, kind in zip(params["layers"], self._hybrid_kinds()):
+                f = self._maybe_remat(functools.partial(
+                    self._hybrid_body, kind=kind, positions=positions))
+                x = f(x, lp)
+        elif cfg.family == "moe":
+            for lp in params.get("dense_prefix", []):
+                f = self._maybe_remat(functools.partial(
+                    self._dense_body, positions=positions, causal=True))
+                x = f(x, lp)
+            body = self._maybe_remat(lambda h, lp: (
+                self._dense_body(h, lp, positions, True), None))
+            x = self._run_stack(body, x, params["layers"])
+        elif cfg.encdec is not None:
+            enc = self._encode(params, batch)
+            def cross_body(h, lp):
+                kv = self._cross_kv(lp["cross"], enc)
+                return self._cross_body(h, lp, positions, kv), None
+            x = self._run_stack(self._maybe_remat(cross_body), x,
+                                params["layers"])
+        else:
+            window = cfg.hybrid.attention_window if cfg.hybrid else None
+            body = self._maybe_remat(lambda h, lp: (
+                self._dense_body(h, lp, positions, causal, window), None))
+            x = self._run_stack(body, x, params["layers"])
+        return x
+
+    def _encode(self, params: dict, batch: dict) -> jax.Array:
+        """Whisper encoder over stub frame embeddings [B, T_enc, d]."""
+        cfg = self.cfg
+        fe = batch["frontend"].astype(self.opt.compute_dtype)
+        pos = jnp.arange(fe.shape[1], dtype=jnp.int32)[None, :]
+        x = fe + params["enc_pos_embed"]["table"].astype(fe.dtype)[None]
+        body = self._maybe_remat(lambda h, lp: (
+            self._dense_body(h, lp, pos, causal=False), None))
+        x = self._run_stack(body, x, params["enc_layers"])
+        return layers.apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+    # ------------------------------------------------------------------
+    # Loss (train step body)
+    # ------------------------------------------------------------------
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = self._backbone(params, batch)
+        logits = self._unembed(params, x)
+        targets = batch["targets"]
+        xent = _xent(logits, targets)
+        aux: dict[str, jax.Array] = {"xent": xent}
+        total = xent
+        if cfg.family == "moe" and self.opt.moe_aux_weight:
+            # router balance loss on the embedding stream (cheap proxy input)
+            e, _ = self._embed_inputs(params, batch)
+            lb = moe.load_balance_loss(
+                e, _first_layer(params["layers"], "moe")["router"], cfg.moe)
+            aux["load_balance"] = lb
+            total = total + self.opt.moe_aux_weight * lb
+        if cfg.num_mtp_modules and "mtp" in params:
+            mtp_loss = self._mtp_loss(params, batch, x)
+            aux["mtp"] = mtp_loss
+            total = total + self.opt.mtp_loss_weight * mtp_loss
+        aux["total"] = total
+        return total, aux
+
+    def _mtp_loss(self, params: dict, batch: dict, x: jax.Array) -> jax.Array:
+        """DeepSeek-V3 multi-token prediction (depth 1), reusing the main
+        backbone hidden states ``x``: combine h_t with emb(t+1), run one
+        extra layer, predict token t+2."""
+        cfg = self.cfg
+        targets = batch["targets"]
+        positions = jnp.arange(targets.shape[1], dtype=jnp.int32)[None, :]
+        mp = params["mtp"]
+        e = layers.embed(targets, params["embed"], self.opt.compute_dtype)
+        h = jnp.concatenate([
+            layers.apply_norm(x, mp["norm_h"], cfg.norm),
+            layers.apply_norm(e, mp["norm_e"], cfg.norm)], axis=-1)
+        h = layers.apply_dense(h, mp["proj"])
+        h = self._dense_body(h, mp["layer"], positions, True)
+        logits = self._unembed(params, h)
+        return _xent(logits, jnp.roll(targets, -1, axis=1))
+
+    # ------------------------------------------------------------------
+    # Decode (one new token with per-family cache)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        kd = jnp.bfloat16
+
+        def kv(n_layers, s, n_kv, hd):
+            shape = (n_layers, batch, s, n_kv, hd)
+            if abstract:
+                return KVCache(jax.ShapeDtypeStruct(shape, kd),
+                               jax.ShapeDtypeStruct(shape, kd))
+            return KVCache(jnp.zeros(shape, kd), jnp.zeros(shape, kd))
+
+        if cfg.family == "ssm":
+            st = ssm.ssm_init_state(cfg, batch, abstract)
+            return jax.tree.map(
+                lambda l: _stack_abstract(l, cfg.num_layers) if abstract
+                else jnp.broadcast_to(l, (cfg.num_layers,) + l.shape).copy(), st)
+        if cfg.mla is not None:
+            m = cfg.mla
+            shapes = [(cfg.num_layers, batch, max_len, m.kv_lora_rank),
+                      (cfg.num_layers, batch, max_len, m.qk_rope_head_dim)]
+            if abstract:
+                return MLACache(*[jax.ShapeDtypeStruct(s, kd) for s in shapes])
+            return MLACache(*[jnp.zeros(s, kd) for s in shapes])
+        if cfg.family == "hybrid":
+            caches = []
+            for kind in self._hybrid_kinds():
+                if kind == "r":
+                    caches.append(rglru.rglru_init_state(cfg, batch, abstract))
+                else:
+                    w = min(cfg.hybrid.attention_window, max_len)
+                    shape = (batch, w, cfg.num_kv_heads, cfg.resolved_head_dim)
+                    if abstract:
+                        caches.append(KVCache(jax.ShapeDtypeStruct(shape, kd),
+                                              jax.ShapeDtypeStruct(shape, kd)))
+                    else:
+                        caches.append(KVCache(jnp.zeros(shape, kd),
+                                              jnp.zeros(shape, kd)))
+            return caches
+        if cfg.encdec is not None:
+            se = cfg.encdec.encoder_seq_len
+            return {"self": kv(cfg.num_layers, max_len, cfg.num_kv_heads,
+                               cfg.resolved_head_dim),
+                    "cross": kv(cfg.num_layers, se, cfg.num_kv_heads,
+                                cfg.resolved_head_dim)}
+        return kv(cfg.num_layers, max_len, cfg.num_kv_heads,
+                  cfg.resolved_head_dim)
+
+    def prefill(self, params: dict, batch: dict, max_len: int):
+        """Prompt -> (logits [B,S,V], decode cache ready at index S).
+
+        The serving counterpart of ``forward``: identical math, but every
+        layer also emits its decode-time state.
+        """
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        s = batch["tokens"].shape[1]
+
+        def ffn_half(h, lp):
+            # SP residual pinning only — prefill never had the scan-carry
+            # sharding bug, and pinning batch here regressed propagation
+            # (see EXPERIMENTS.md §Perf prefill iteration 1)
+            h = constrain(h, (None, "seq", None))
+            hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+            if "moe" in lp:
+                return h + moe.apply_moe(hn, lp["moe"], cfg)
+            return h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+
+        if cfg.family == "ssm":
+            def body(h, lp):
+                hn = layers.apply_norm(h, lp["ln"], cfg.norm)
+                o, st = ssm.ssm_prefill(hn, lp["ssm"], cfg)
+                return h + o, st
+            x, cache = self._run_stack_collect(body, x, params["layers"])
+        elif cfg.family == "hybrid":
+            cache = []
+            for lp, kind in zip(params["layers"], self._hybrid_kinds()):
+                hn = layers.apply_norm(x, lp["ln1"], cfg.norm)
+                if kind == "r":
+                    o, st = rglru.rglru_prefill(hn, lp["rglru"], cfg)
+                else:
+                    o, st = attn.gqa_prefill(
+                        hn, lp["attn"], cfg, positions=positions,
+                        max_len=max_len, window=cfg.hybrid.attention_window)
+                x = ffn_half(x + o, lp)
+                cache.append(st)
+        elif cfg.encdec is not None:
+            enc = self._encode(params, batch)
+            def body(h, lp):
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                o, st = attn.gqa_prefill(hn, lp["attn"], cfg,
+                                         positions=positions, max_len=max_len)
+                h = h + o
+                kc, vc = self._cross_kv(lp["cross"], enc)
+                hn = layers.apply_norm(h, lp["ln_cross"], cfg.norm)
+                h = h + self._cross_attend(hn, lp["cross"], (kc, vc))
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                cross = KVCache(kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+                return h, (st, cross)
+            x, (self_c, cross_c) = self._run_stack_collect(
+                body, x, params["layers"])
+            cache = {"self": self_c, "cross": cross_c}
+        else:
+            def body(h, lp):
+                h = constrain(h, (None, "seq", None))
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                if cfg.mla is not None:
+                    o, st = attn.mla_prefill(hn, lp["attn"], cfg,
+                                             positions=positions, max_len=max_len)
+                else:
+                    o, st = attn.gqa_prefill(hn, lp["attn"], cfg,
+                                             positions=positions, max_len=max_len)
+                return ffn_half(h + o, lp), st
+
+            pref = []
+            for lp in params.get("dense_prefix", []):
+                x, st = body(x, lp)
+                pref.append(st)
+            x, main_cache = self._run_stack_collect(body, x, params["layers"])
+            if pref:
+                stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *pref)
+                cache = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                                     stacked, main_cache)
+            else:
+                cache = main_cache
+        return self._unembed(params, x), cache
+
+    def decode_step(self, params: dict, cache, tokens: jax.Array,
+                    cache_index: jax.Array):
+        """tokens: [B, 1] -> (logits [B, 1, vocab], new cache).
+
+        ``cache_index``: scalar, or [B] per-slot indices (serving)."""
+        cfg = self.cfg
+        idx_vec = attn.as_index_vector(cache_index, tokens.shape[0])
+        x = layers.embed(tokens, params["embed"], self.opt.compute_dtype)
+        if cfg.positional == "learned":
+            idx = jnp.minimum(idx_vec, cfg.max_position_embeddings - 1)
+            x = x + params["pos_embed"]["table"].astype(x.dtype)[idx][:, None]
+
+        if cfg.family == "ssm":
+            def body(h, inp):
+                lp, st = inp
+                hn = layers.apply_norm(h, lp["ln"], cfg.norm)
+                out, st2 = ssm.ssm_decode(hn, lp["ssm"], cfg, st)
+                return h + out, st2
+            x, new_cache = self._run_stack_cache(body, x, params["layers"], cache)
+        elif cfg.mla is not None:
+            def body(h, inp):
+                lp, c = inp
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                o, c2 = attn.mla_decode(hn, lp["attn"], cfg, c, cache_index)
+                h = h + o
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                if "moe" in lp:
+                    h = h + moe.apply_moe(hn, lp["moe"], cfg)
+                else:
+                    h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                return h, c2
+            # dense prefix layers hold their own caches at the front
+            npref = len(params.get("dense_prefix", []))
+            pref_cache = jax.tree.map(lambda l: l[:npref], cache)
+            main_cache = jax.tree.map(lambda l: l[npref:], cache)
+            new_pref = []
+            for i, lp in enumerate(params.get("dense_prefix", [])):
+                ci = jax.tree.map(lambda l: l[i], pref_cache)
+                x, c2 = body(x, (lp, ci))
+                new_pref.append(c2)
+            x, new_main = self._run_stack_cache(body, x, params["layers"],
+                                                main_cache)
+            if new_pref:
+                stacked_pref = jax.tree.map(
+                    lambda *ls: jnp.stack(ls), *new_pref)
+                new_cache = jax.tree.map(
+                    lambda a, b_: jnp.concatenate([a, b_]), stacked_pref, new_main)
+            else:
+                new_cache = new_main
+        elif cfg.family == "hybrid":
+            new_cache = []
+            for lp, kind, st in zip(params["layers"], self._hybrid_kinds(), cache):
+                hn = layers.apply_norm(x, lp["ln1"], cfg.norm)
+                if kind == "r":
+                    o, st2 = rglru.rglru_decode(hn, lp["rglru"], cfg, st)
+                else:
+                    o, st2 = attn.gqa_decode(hn, lp["attn"], cfg, st, cache_index,
+                                             window=cfg.hybrid.attention_window,
+                                             grouped=self.opt.grouped_gqa)
+                x = x + o
+                hn = layers.apply_norm(x, lp["ln2"], cfg.norm)
+                x = x + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                new_cache.append(st2)
+        elif cfg.encdec is not None:
+            def body(h, inp):
+                lp, (c_self, c_cross) = inp
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                o, c2 = attn.gqa_decode(hn, lp["attn"], cfg, c_self, cache_index,
+                                        grouped=self.opt.grouped_gqa)
+                h = h + o
+                hn = layers.apply_norm(h, lp["ln_cross"], cfg.norm)
+                h = h + self._cross_attend(hn, lp["cross"], (c_cross.k, c_cross.v))
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                return h, (c2, c_cross)
+            x, new_cache = self._run_stack_cache(
+                body, x, params["layers"], (cache["self"], cache["cross"]))
+            new_cache = {"self": new_cache[0], "cross": new_cache[1]}
+        else:
+            def body(h, inp):
+                lp, c = inp
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                o, c2 = attn.gqa_decode(hn, lp["attn"], cfg, c, cache_index,
+                                        grouped=self.opt.grouped_gqa)
+                h = h + o
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                if "moe" in lp:
+                    h = h + moe.apply_moe(hn, lp["moe"], cfg)
+                else:
+                    h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                return h, c2
+            npref = len(params.get("dense_prefix", []))
+            if npref:
+                pref_cache = jax.tree.map(lambda l: l[:npref], cache)
+                main_cache = jax.tree.map(lambda l: l[npref:], cache)
+                new_pref = []
+                for i, lp in enumerate(params["dense_prefix"]):
+                    ci = jax.tree.map(lambda l: l[i], pref_cache)
+                    x, c2 = body(x, (lp, ci))
+                    new_pref.append(c2)
+                x, new_main = self._run_stack_cache(body, x, params["layers"],
+                                                main_cache)
+                stacked_pref = jax.tree.map(lambda *ls: jnp.stack(ls), *new_pref)
+                new_cache = jax.tree.map(
+                    lambda a, b_: jnp.concatenate([a, b_]), stacked_pref, new_main)
+            else:
+                x, new_cache = self._run_stack_cache(body, x, params["layers"], cache)
+        return self._unembed(params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Cross-entropy that stays sharded over a vocab-partitioned logits
+    tensor: the gold logit is picked with a fused iota-compare-reduce, not
+    a gather (a gather across the sharded vocab axis would force GSPMD to
+    all-gather the full [B, S, V] logits on every device)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    hit = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1) \
+        == targets[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def _first_layer(stacked: dict, key: str) -> dict:
+    return jax.tree.map(lambda l: l[0], stacked[key])
+
+
+def _stack_abstract(leaf, n: int):
+    return jax.ShapeDtypeStruct((n,) + leaf.shape, leaf.dtype)
+

@@ -1,0 +1,87 @@
+"""Parameter construction with logical sharding axes.
+
+``ParamBuilder`` runs the *same* structural code in three modes:
+
+* ``init``     — real arrays (used by smoke tests / examples on CPU),
+* ``abstract`` — ``jax.ShapeDtypeStruct`` leaves (used by the multi-pod
+  dry-run: no allocation ever happens for full-size configs),
+* ``axes``     — ``jax.sharding.PartitionSpec`` leaves holding *logical* axis
+  names; ``repro.distributed.sharding`` translates them to mesh axes.
+
+This mirrors ADAPTOR's separation between the synthesized hardware shape
+(abstract structure + tiling) and the bits that flow through it at runtime.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class ParamBuilder:
+    MODES = ("init", "abstract", "axes")
+
+    def __init__(self, mode: str = "init", rng: jax.Array | None = None,
+                 dtype=jnp.float32):
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
+        if mode == "init" and rng is None:
+            raise ValueError("init mode requires an rng key")
+        self.mode = mode
+        self.rng = rng
+        self.dtype = dtype
+        self._counter = 0
+        self._prefix_shape: tuple[int, ...] = ()
+        self._prefix_axes: tuple[str | None, ...] = ()
+
+    @contextlib.contextmanager
+    def stacked(self, n: int, axis_name: str | None = "layers") -> Iterator[None]:
+        """Prepend a stacked-layer dimension to every param created inside."""
+        old_shape, old_axes = self._prefix_shape, self._prefix_axes
+        self._prefix_shape = old_shape + (n,)
+        self._prefix_axes = old_axes + (axis_name,)
+        try:
+            yield
+        finally:
+            self._prefix_shape, self._prefix_axes = old_shape, old_axes
+
+    def param(self, shape: tuple[int, ...], axes: tuple[str | None, ...],
+              init: str = "normal", scale: float | None = None, dtype=None):
+        if len(shape) != len(axes):
+            raise ValueError(f"shape {shape} / axes {axes} rank mismatch")
+        shape = self._prefix_shape + tuple(shape)
+        axes = self._prefix_axes + tuple(axes)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return P(*axes)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        key = jax.random.fold_in(self.rng, self._counter)
+        self._counter += 1
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            if scale is None:
+                # fan-in scaled, matching standard transformer init
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            return (scale * jax.random.normal(key, shape)).astype(dtype)
+        if init == "uniform":
+            scale = 1.0 if scale is None else scale
+            return (scale * jax.random.uniform(key, shape, minval=-1.0)).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+def build_in_all_modes(build_fn, cfg, rng=None, dtype=jnp.float32):
+    """Convenience: returns (params, abstract, axes) for one builder fn."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    params = build_fn(ParamBuilder("init", rng, dtype), cfg)
+    abstract = build_fn(ParamBuilder("abstract", dtype=dtype), cfg)
+    axes = build_fn(ParamBuilder("axes", dtype=dtype), cfg)
+    return params, abstract, axes

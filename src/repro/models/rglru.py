@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrent block: two input branches (value + gate), a short temporal
+conv, the Real-Gated Linear Recurrent Unit, and an output projection.
+Gates are block-diagonal linears (one block per head) per the Griffin
+paper.  All projections route through ``layers.dense`` (ADAPTOR-tiled on
+TPU); the recurrence is a ``lax.scan`` with an O(width) carry.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import build_dense, apply_dense
+
+# Griffin fixes c = 8 in a_t = a^(c * softplus(param) * r_t)
+_C = 8.0
+_CONV_K = 4
+
+
+class LRUState(NamedTuple):
+    conv: jax.Array  # [B, K-1, width]
+    h: jax.Array     # [B, width] recurrent state (f32)
+
+
+def width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def _heads(cfg: ArchConfig) -> int:
+    return max(cfg.num_heads, 1)
+
+
+def build_rglru(b, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    w = width(cfg)
+    nh = _heads(cfg)
+    blk = w // nh
+    return {
+        "in_x": build_dense(b, d, w, ("embed", "lru")),
+        "in_gate": build_dense(b, d, w, ("embed", "lru")),
+        "conv_w": b.param((_CONV_K, w), (None, "lru"),
+                          init="normal", scale=1.0 / math.sqrt(_CONV_K)),
+        "conv_b": b.param((w,), ("lru",), init="zeros"),
+        # block-diagonal gates: [heads, blk, blk]
+        "gate_in_w": b.param((nh, blk, blk), ("heads", None, "lru")),
+        "gate_in_b": b.param((w,), ("lru",), init="zeros"),
+        "gate_a_w": b.param((nh, blk, blk), ("heads", None, "lru")),
+        "gate_a_b": b.param((w,), ("lru",), init="zeros"),
+        "a_param": b.param((w,), ("lru",), init="uniform", scale=1.0),
+        "out": build_dense(b, w, d, ("lru", "embed")),
+    }
+
+
+def _block_diag(x: jax.Array, w_blocks: jax.Array, bias: jax.Array) -> jax.Array:
+    """x: [..., w] through block-diagonal weight [nh, blk, blk]."""
+    nh, blk, _ = w_blocks.shape
+    xs = x.reshape(x.shape[:-1] + (nh, blk))
+    y = jnp.einsum("...hi,hij->...hj", xs, w_blocks.astype(x.dtype))
+    return y.reshape(x.shape) + bias.astype(x.dtype)
+
+
+def _gates(x_conv: jax.Array, p: dict):
+    """Returns (a_t, gated_input) for the recurrence, in f32."""
+    r = jax.nn.sigmoid(_block_diag(x_conv, p["gate_a_w"], p["gate_a_b"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(x_conv, p["gate_in_w"], p["gate_in_b"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # input normalization sqrt(1 - a^2) keeps the state variance bounded
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    gated = i * x_conv.astype(jnp.float32) * mult
+    return a, gated
+
+
+def _conv_full(xi: jax.Array, p: dict) -> jax.Array:
+    b_, s, w = xi.shape
+    xp = jnp.pad(xi, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    windows = jnp.stack([xp[:, i: i + s] for i in range(_CONV_K)], axis=-1)
+    return jnp.einsum("bswk,kw->bsw", windows,
+                      p["conv_w"].astype(xi.dtype)[::-1]) \
+        + p["conv_b"].astype(xi.dtype)
+
+
+def rglru_forward(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence recurrent block.  x: [B, S, d]."""
+    b_, s, d = x.shape
+    xi = apply_dense(x, p["in_x"])
+    gate = jax.nn.gelu(apply_dense(x, p["in_gate"]), approximate=True)
+    x_conv = _conv_full(xi, p)
+    a, gated = _gates(x_conv, p)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h0 = jnp.zeros((b_, x_conv.shape[-1]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) * gate
+    return apply_dense(y, p["out"])
+
+
+def rglru_prefill(x: jax.Array, p: dict, cfg: ArchConfig
+                  ) -> tuple[jax.Array, LRUState]:
+    """Full-sequence forward that also returns the decode state."""
+    b_, s, d = x.shape
+    xi = apply_dense(x, p["in_x"])
+    gate = jax.nn.gelu(apply_dense(x, p["in_gate"]), approximate=True)
+    x_conv = _conv_full(xi, p)
+    a, gated = _gates(x_conv, p)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h0 = jnp.zeros((b_, x_conv.shape[-1]), jnp.float32)
+    h_final, hs = jax.lax.scan(step, h0,
+                               (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) * gate
+    out = apply_dense(y, p["out"])
+    pad = _CONV_K - 1
+    xp = jnp.pad(xi, ((0, 0), (pad, 0), (0, 0)))
+    return out, LRUState(xp[:, -pad:].astype(jnp.bfloat16), h_final)
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int, abstract: bool = False):
+    w = width(cfg)
+    conv_shape = (batch, _CONV_K - 1, w)
+    h_shape = (batch, w)
+    if abstract:
+        return LRUState(jax.ShapeDtypeStruct(conv_shape, jnp.bfloat16),
+                        jax.ShapeDtypeStruct(h_shape, jnp.float32))
+    return LRUState(jnp.zeros(conv_shape, jnp.bfloat16),
+                    jnp.zeros(h_shape, jnp.float32))
+
+
+def rglru_decode(x: jax.Array, p: dict, cfg: ArchConfig,
+                 state: LRUState) -> tuple[jax.Array, LRUState]:
+    """One-token decode.  x: [B, 1, d]."""
+    b_, one, d = x.shape
+    xi = apply_dense(x[:, 0], p["in_x"])
+    gate = jax.nn.gelu(apply_dense(x[:, 0], p["in_gate"]), approximate=True)
+    window = jnp.concatenate([state.conv.astype(xi.dtype), xi[:, None]], axis=1)
+    x_conv = jnp.einsum("bkw,kw->bw", window, p["conv_w"].astype(x.dtype)[::-1]) \
+        + p["conv_b"].astype(x.dtype)
+    a, gated = _gates(x_conv, p)
+    h = a * state.h + gated
+    y = h.astype(x.dtype) * gate
+    out = apply_dense(y, p["out"])[:, None]
+    return out, LRUState(window[:, 1:].astype(state.conv.dtype), h)

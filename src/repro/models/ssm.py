@@ -1,0 +1,174 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+The ADAPTOR technique targets dense matmuls; here the in/x/dt/out
+projections route through ``layers.dense`` (tiled on TPU), while the
+selective recurrence itself has no paper analogue (documented in
+DESIGN.md §Arch-applicability).  The recurrence is a ``lax.scan`` over
+time with an O(d_inner * d_state) carry — constant memory in sequence
+length, which is what makes the ``long_500k`` cell runnable.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import build_dense, apply_dense
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state."""
+
+    conv: jax.Array  # [B, K-1, d_inner] trailing conv window
+    h: jax.Array     # [B, d_inner, d_state] SSM state (f32)
+
+
+def dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, s.state_dim
+
+
+def build_ssm(b, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, dt_rank, n = dims(cfg)
+    return {
+        "in_proj": build_dense(b, d, 2 * d_inner, ("embed", "dinner")),
+        "conv_w": b.param((s.conv_kernel, d_inner), (None, "dinner"),
+                          init="normal", scale=1.0 / math.sqrt(s.conv_kernel)),
+        "conv_b": b.param((d_inner,), ("dinner",), init="zeros"),
+        "x_proj": build_dense(b, d_inner, dt_rank + 2 * n, ("dinner", None)),
+        "dt_proj": build_dense(b, dt_rank, d_inner, (None, "dinner"),
+                               use_bias=True),
+        "a_log": b.param((d_inner, n), ("dinner", "state"), init="ones"),
+        "d_skip": b.param((d_inner,), ("dinner",), init="ones"),
+        "out_proj": build_dense(b, d_inner, d, ("dinner", "embed")),
+    }
+
+
+def _split_proj(xz: jax.Array, d_inner: int) -> tuple[jax.Array, jax.Array]:
+    return xz[..., :d_inner], xz[..., d_inner:]
+
+
+def _ssm_inputs(x_conv: jax.Array, p: dict, cfg: ArchConfig):
+    """x_conv: [..., d_inner] -> (dt, B, C) selective parameters."""
+    d_inner, dt_rank, n = dims(cfg)
+    proj = apply_dense(x_conv, p["x_proj"])
+    dt = jax.nn.softplus(apply_dense(proj[..., :dt_rank], p["dt_proj"])
+                         .astype(jnp.float32))                     # [..., d_inner]
+    b_mat = proj[..., dt_rank: dt_rank + n].astype(jnp.float32)    # [..., n]
+    c_mat = proj[..., dt_rank + n:].astype(jnp.float32)            # [..., n]
+    return dt, b_mat, c_mat
+
+
+def _discretize(dt, b_mat, x, a_log):
+    """ZOH-style discretization: returns (A_bar, Bx) both [..., d_inner, n]."""
+    a = -jnp.exp(a_log.astype(jnp.float32))                        # [d_inner, n]
+    a_bar = jnp.exp(dt[..., None] * a)                             # [..., d_inner, n]
+    bx = dt[..., None] * b_mat[..., None, :] * x[..., None].astype(jnp.float32)
+    return a_bar, bx
+
+
+def ssm_forward(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence mamba block.  x: [B, S, d] -> [B, S, d]."""
+    s_cfg = cfg.ssm
+    b_, s, d = x.shape
+    d_inner, _, n = dims(cfg)
+    xz = apply_dense(x, p["in_proj"])
+    xi, z = _split_proj(xz, d_inner)
+    # causal depthwise conv along time
+    pad = s_cfg.conv_kernel - 1
+    xp = jnp.pad(xi, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack([xp[:, i: i + s] for i in range(s_cfg.conv_kernel)], axis=-1)
+    # window index k holds x[t-(K-1)+k]; conv weight j applies to x[t-j]
+    x_conv = jnp.einsum("bsdk,kd->bsd", windows, p["conv_w"].astype(x.dtype)[::-1])
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x.dtype))
+    dt, b_mat, c_mat = _ssm_inputs(x_conv, p, cfg)
+    a_bar, bx = _discretize(dt, b_mat, x_conv, p["a_log"])
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp                  # [B, d_inner, n], ..., [B, n]
+        h = a_t * h + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b_, d_inner, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (a_bar.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3),
+         c_mat.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2)                 # [B, S, d_inner]
+    y = y + x_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_dense(y, p["out_proj"])
+
+
+def ssm_prefill(x: jax.Array, p: dict, cfg: ArchConfig
+                ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence forward that also returns the decode state."""
+    s_cfg = cfg.ssm
+    b_, s, d = x.shape
+    d_inner, _, n = dims(cfg)
+    xz = apply_dense(x, p["in_proj"])
+    xi, z = _split_proj(xz, d_inner)
+    pad = s_cfg.conv_kernel - 1
+    xp = jnp.pad(xi, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack([xp[:, i: i + s] for i in range(s_cfg.conv_kernel)], axis=-1)
+    x_conv = jnp.einsum("bsdk,kd->bsd", windows, p["conv_w"].astype(x.dtype)[::-1])
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x.dtype))
+    dt, b_mat, c_mat = _ssm_inputs(x_conv, p, cfg)
+    a_bar, bx = _discretize(dt, b_mat, x_conv, p["a_log"])
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    h0 = jnp.zeros((b_, d_inner, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0, (a_bar.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3),
+                   c_mat.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2)
+    y = y + x_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = apply_dense(y, p["out_proj"])
+    conv_tail = xp[:, -pad:] if pad else xi[:, :0]
+    return out, SSMState(conv_tail.astype(jnp.bfloat16), h_final)
+
+
+def ssm_init_state(cfg: ArchConfig, batch: int, abstract: bool = False):
+    s_cfg = cfg.ssm
+    d_inner, _, n = dims(cfg)
+    conv_shape = (batch, s_cfg.conv_kernel - 1, d_inner)
+    h_shape = (batch, d_inner, n)
+    if abstract:
+        return SSMState(jax.ShapeDtypeStruct(conv_shape, jnp.bfloat16),
+                        jax.ShapeDtypeStruct(h_shape, jnp.float32))
+    return SSMState(jnp.zeros(conv_shape, jnp.bfloat16),
+                    jnp.zeros(h_shape, jnp.float32))
+
+
+def ssm_decode(x: jax.Array, p: dict, cfg: ArchConfig,
+               state: SSMState) -> tuple[jax.Array, SSMState]:
+    """One-token decode.  x: [B, 1, d]."""
+    s_cfg = cfg.ssm
+    b_, one, d = x.shape
+    d_inner, _, n = dims(cfg)
+    xz = apply_dense(x[:, 0], p["in_proj"])
+    xi, z = _split_proj(xz, d_inner)
+    window = jnp.concatenate([state.conv.astype(xi.dtype), xi[:, None]], axis=1)
+    x_conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype)[::-1])
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x.dtype))
+    dt, b_mat, c_mat = _ssm_inputs(x_conv, p, cfg)
+    a_bar, bx = _discretize(dt, b_mat, x_conv, p["a_log"])
+    h = a_bar * state.h + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_mat)
+    y = y + x_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = apply_dense(y, p["out_proj"])[:, None]
+    return out, SSMState(window[:, 1:].astype(state.conv.dtype), h)

@@ -1,0 +1,35 @@
+"""Token sampling: greedy / temperature / top-k / top-p."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0   # 0 -> greedy
+    top_k: int = 0             # 0 -> disabled
+    top_p: float = 1.0         # 1 -> disabled
+
+
+def sample(logits: jax.Array, rng: jax.Array,
+           params: SamplingParams) -> jax.Array:
+    """logits: [B, V] -> tokens [B] int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / params.temperature
+    if params.top_k:
+        kth = jnp.sort(x, axis=-1)[:, -params.top_k][:, None]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    if params.top_p < 1.0:
+        sorted_x = jnp.sort(x, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_x, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        keep = cum - probs < params.top_p
+        cutoff = jnp.min(jnp.where(keep, sorted_x, jnp.inf), axis=-1,
+                         keepdims=True)
+        x = jnp.where(x < cutoff, -jnp.inf, x)
+    return jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)

@@ -1,0 +1,135 @@
+"""Checkpointing: atomic, resumable, async — the restart half of fault
+tolerance.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        arrays.npz          flattened state leaves, keyed by tree path
+        meta.json           step, data-pipeline state, config fingerprint
+        COMMITTED           written last; partial checkpoints are invisible
+
+Writes go to ``step_X.tmp`` and are renamed only after COMMITTED exists,
+so a host failure mid-save can never corrupt the restore path.  ``save``
+optionally detaches to a background thread after the device->host copy
+(async checkpointing: the train loop continues while the npz is written).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save(directory: str, step: int, state: Any, *,
+         meta: dict | None = None, keep: int = 3,
+         async_write: bool = False) -> threading.Thread | None:
+    """Write one checkpoint.  Returns the writer thread if async."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    # unique tmp per call: an async writer and a later sync writer of the
+    # same step must never collide (the rename stays atomic either way)
+    tmp = final + f".tmp{os.getpid()}_{threading.get_ident()}_{time.time_ns()}"
+    # device -> host copy happens here, synchronously (consistent snapshot)
+    arrays = _flatten(jax.tree.map(lambda x: jax.device_get(x), state))
+
+    def write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, **(meta or {})}, f)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write("ok")
+        try:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except OSError:
+            # a concurrent writer of the same step won the rename; the
+            # committed content is identical — drop our copy
+            if os.path.exists(os.path.join(final, "COMMITTED")):
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                raise
+        _gc(directory, keep)
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "COMMITTED")):
+                s = int(d.split("_")[1])
+                best = s if best is None else max(best, s)
+    return best
+
+
+def restore(directory: str, step: int, like: Any,
+            shardings: Any | None = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (abstract or concrete tree).
+    With ``shardings`` given, leaves are placed sharded (elastic restart
+    onto a different mesh re-shards here)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat[0]:
+        arr = data[_path_str(path)]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"checkpoint/param shape mismatch at "
+                             f"{_path_str(path)}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, sh: jax.device_put(x, sh), tree, shardings)
+    return tree, meta
+
+
+def restore_latest(directory: str, like: Any,
+                   shardings: Any | None = None) -> tuple[Any, dict] | None:
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return restore(directory, step, like, shardings)

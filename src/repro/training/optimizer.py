@@ -1,0 +1,109 @@
+"""AdamW + schedules, built from scratch (no optax in this environment).
+
+Optimizer state lives in the same tree structure as the params, so the
+sharding rules that partition a parameter partition its moments
+identically — with ``fsdp`` enabled this is ZeRO-style optimizer-state
+sharding for free.  ``moment_dtype=bfloat16`` halves optimizer memory for
+the very largest configs (the 671B note in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array   # int32 scalar
+    m: Any            # first-moment tree
+    v: Any            # second-moment tree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def cosine_lr(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    frac = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), norm
+
+
+def _is_decayed(path: tuple) -> bool:
+    """Weight decay applies to matrices, not to norms/biases (standard)."""
+    last = str(path[-1]) if path else ""
+    return not any(t in last for t in ("bias", "scale", "ln", "_g", "_b",
+                                       "b1", "b2", "bq", "bk", "bv", "bo",
+                                       "conv_b", "gate_in_b", "gate_a_b",
+                                       "a_param", "d_skip"))
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig
+                 ) -> tuple[Any, AdamWState, dict]:
+    """One AdamW step.  Returns (params', state', metrics)."""
+    grads, grad_norm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_lr(step, cfg)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, m, v in zip(paths, flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        upd = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        if cfg.weight_decay and _is_decayed(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m32.astype(cfg.moment_dtype))
+        new_v.append(v32.astype(cfg.moment_dtype))
+
+    metrics = {"lr": lr, "grad_norm": grad_norm}
+    return (jax.tree.unflatten(tdef, new_p),
+            AdamWState(step, jax.tree.unflatten(tdef, new_m),
+                       jax.tree.unflatten(tdef, new_v)),
+            metrics)

@@ -1,0 +1,25 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import REGISTRY, reduced
+
+
+def no_drop(cfg):
+    """Reduced MoE configs with lossless capacity (for equivalence tests)."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=float(cfg.moe.num_experts)))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_cfg(name, lossless_moe=False):
+    cfg = reduced(REGISTRY[name])
+    return no_drop(cfg) if lossless_moe else cfg

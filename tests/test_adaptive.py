@@ -1,0 +1,131 @@
+"""The paper's C1 claim, test-enforced: one compiled engine serves every
+topology within maxima with zero retraces, matching the unpadded oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine_ref
+from repro.core.adaptive import AdaptiveEngine, EngineOptions, pack
+from repro.core.registers import Maxima, make_registers, registers_for
+from repro.configs import get_config
+
+MX = Maxima(seq_max=32, heads_max=8, layers_enc_max=4, layers_dec_max=2,
+            d_model_max=96, d_ff_max=192, out_max=100, head_dim_max=16,
+            vocab=100)
+
+TOPOLOGIES = [
+    dict(seq=16, d_model=64, heads=4, d_ff=128, layers_enc=2, layers_dec=0,
+         act="relu"),
+    dict(seq=32, d_model=96, heads=8, d_ff=192, layers_enc=4, layers_dec=0,
+         act="gelu"),                                  # the maxima topology
+    dict(seq=24, d_model=48, heads=3, d_ff=96, layers_enc=3, layers_dec=2,
+         act="relu"),                                  # enc-dec, odd heads
+    dict(seq=16, d_model=64, heads=4, d_ff=128, layers_enc=2, layers_dec=0,
+         act="relu", kv_heads=2),                      # GQA packing
+]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return AdaptiveEngine(MX, EngineOptions(batch=2, decoder=True))
+
+
+def _run(engine, step, topo, seed):
+    net = engine_ref.random_network(
+        jax.random.PRNGKey(seed), vocab=100, out=100,
+        **{k: v for k, v in topo.items() if k != "act"})
+    params = pack(engine, net)
+    regs = make_registers(
+        sequence=topo["seq"], heads=topo["heads"],
+        layers_enc=topo["layers_enc"], layers_dec=topo["layers_dec"],
+        embeddings=topo["d_model"], hidden=topo["d_ff"], out=100,
+        kv_heads=topo.get("kv_heads", topo["heads"]))
+    toks = jax.random.randint(jax.random.PRNGKey(100 + seed),
+                              (2, MX.seq_max), 0, 100)
+    tgt = jax.random.randint(jax.random.PRNGKey(200 + seed),
+                             (2, MX.seq_max), 0, 100)
+    act = jnp.int32(1 if topo["act"] == "gelu" else 0)
+    out = step(params, regs, act, toks, tgt)
+    want = engine_ref.forward(
+        net, toks[:, :topo["seq"]], activation=topo["act"],
+        tgt_tokens=tgt[:, :topo["seq"]] if topo["layers_dec"] else None)
+    return np.asarray(out[:, :topo["seq"], :100]), np.asarray(want)
+
+
+@pytest.mark.parametrize("i", range(len(TOPOLOGIES)))
+def test_engine_matches_oracle(engine, i):
+    step = engine.compile()
+    got, want = _run(engine, step, TOPOLOGIES[i], seed=i)
+    np.testing.assert_allclose(got, want, atol=2e-4 * np.abs(want).max(),
+                               rtol=1e-3)
+
+
+def test_no_retrace_across_topologies(engine):
+    """The 36-hour-synthesis amortization claim: N topologies, 1 trace."""
+    step = engine.compile()
+    for i, t in enumerate(TOPOLOGIES):
+        _run(engine, step, t, seed=10 + i)
+    assert engine.trace_count() == 1
+
+
+def test_maxima_violation_rejected():
+    MX.validate({"sequence": 32, "heads": 8})
+    with pytest.raises(ValueError, match="re-synthesis"):
+        MX.validate({"heads": 16})
+    with pytest.raises(ValueError, match="re-synthesis"):
+        MX.validate({"embeddings": 1024})
+
+
+def test_registers_for_configs():
+    regs = registers_for(get_config("adaptor-bert"), sequence=64)
+    assert int(regs.heads) == 12 and int(regs.embeddings) == 768
+    assert int(regs.layers_dec) == 0
+    regs = registers_for(get_config("whisper-medium"), sequence=64)
+    assert int(regs.layers_enc) == 24 and int(regs.layers_dec) == 24
+
+
+def test_idle_lanes_do_not_leak(engine):
+    """Loading a big net then selecting a smaller topology must not let the
+    big net's extra lanes contaminate the output (the clock-gating
+    equivalence)."""
+    step = engine.compile()
+    big = engine_ref.random_network(jax.random.PRNGKey(0), seq=32,
+                                    d_model=96, heads=8, d_ff=192,
+                                    layers_enc=4, vocab=100, out=100)
+    small_slice = dict(seq=16, d_model=48, heads=4, d_ff=96, layers_enc=2)
+    params = pack(engine, big)
+    regs = make_registers(sequence=16, heads=4, layers_enc=2, layers_dec=0,
+                          embeddings=48, hidden=96, out=100)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0, 100)
+    out = step(params, regs, jnp.int32(0), toks, toks)
+    # oracle: slice the big net down to the small topology
+    sliced = {
+        "seq": 16, "d_model": 48, "heads": 4, "kv_heads": 4, "head_dim": 12,
+        "d_ff": 96, "vocab": 100, "out": 100,
+        "embed": big["embed"][:, :48], "pos": big["pos"][:16, :48],
+        "w_out": big["w_out"][:48], "b_out": big["b_out"],
+        "dec_layers": [],
+        "enc_layers": [],
+    }
+    for lp in big["enc_layers"][:2]:
+        a = lp["attn"]
+        wq = a["wq"].reshape(96, 8, 12)[:48, :4].reshape(48, 48)
+        wk = a["wk"].reshape(96, 8, 12)[:48, :4].reshape(48, 48)
+        wv = a["wv"].reshape(96, 8, 12)[:48, :4].reshape(48, 48)
+        wo = a["wo"].reshape(8, 12, 96)[:4, :, :48].reshape(48, 48)
+        sliced["enc_layers"].append({
+            "attn": {"wq": wq, "wk": wk, "wv": wv, "wo": wo,
+                     "bq": a["bq"].reshape(8, 12)[:4].reshape(-1),
+                     "bk": a["bk"].reshape(8, 12)[:4].reshape(-1),
+                     "bv": a["bv"].reshape(8, 12)[:4].reshape(-1),
+                     "bo": a["bo"][:48]},
+            "ln1_g": lp["ln1_g"][:48], "ln1_b": lp["ln1_b"][:48],
+            "w1": lp["w1"][:48, :96], "b1": lp["b1"][:96],
+            "w2": lp["w2"][:96, :48], "b2": lp["b2"][:48],
+            "ln2_g": lp["ln2_g"][:48], "ln2_b": lp["ln2_b"][:48]})
+    want = engine_ref.forward(sliced, toks[:, :16], activation="relu")
+    np.testing.assert_allclose(np.asarray(out[:, :16, :100]),
+                               np.asarray(want),
+                               atol=3e-4 * float(np.abs(want).max()),
+                               rtol=1e-3)

@@ -1,0 +1,182 @@
+"""Per-kernel allclose vs the ref.py oracles, swept over shapes/dtypes,
+plus hypothesis property tests (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import quantize
+from repro.kernels import ops, ref
+from repro.kernels import tiled_matmul as mmk
+from repro.kernels import flash_attention as fak
+
+
+def _rnd(key, *shape, dt=jnp.bfloat16):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dt)
+
+
+def _assert_close(got, want, rtol):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = np.abs(want).max() + 1e-9
+    np.testing.assert_allclose(got, want, atol=rtol * scale, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul (Fig. 4)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N", [(64, 200, 800), (256, 384, 512),
+                                   (17, 33, 65), (128, 128, 128),
+                                   (1, 1024, 256)])
+@pytest.mark.parametrize("dt", [jnp.bfloat16, jnp.float32])
+def test_tiled_matmul_shapes(M, K, N, dt):
+    a, b = _rnd(1, M, K, dt=dt), _rnd(2, K, N, dt=dt)
+    _assert_close(ops.tiled_matmul(a, b), ref.tiled_matmul_ref(a, b), 2e-2)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 512),
+                                    (512, 512, 512)])
+def test_tiled_matmul_block_invariance(blocks):
+    """Fig. 4 invariant: the K-tiled accumulation result is independent of
+    the tile sizes chosen at 'synthesis'."""
+    a, b = _rnd(3, 300, 500, dt=jnp.float32), _rnd(4, 500, 200, dt=jnp.float32)
+    got = mmk.tiled_matmul(a, b, bm=blocks[0], bk=blocks[1], bn=blocks[2],
+                           interpret=True)
+    _assert_close(got, ref.tiled_matmul_ref(a, b), 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(M=st.integers(1, 70), K=st.integers(1, 70), N=st.integers(1, 70),
+       seed=st.integers(0, 2**30))
+def test_tiled_matmul_property(M, K, N, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, N), jnp.float32)
+    got = mmk.tiled_matmul(a, b, bm=32, bk=32, bn=32, interpret=True)
+    _assert_close(got, ref.tiled_matmul_ref(a, b), 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# qkv_proj (QKV_PM, Alg. 9) — incl. GQA narrower K/V
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,D,Nq,Nkv", [(96, 256, 512, 128),
+                                        (64, 200, 198, 66),
+                                        (32, 128, 256, 256)])
+def test_qkv_proj(M, D, Nq, Nkv):
+    x, wq = _rnd(5, M, D), _rnd(6, D, Nq)
+    wk, wv = _rnd(7, D, Nkv), _rnd(8, D, Nkv)
+    q, k, v = ops.qkv_proj(x, wq, wk, wv)
+    q2, k2, v2 = ref.qkv_proj_ref(x, wq, wk, wv)
+    _assert_close(q, q2, 2e-2)
+    _assert_close(k, k2, 2e-2)
+    _assert_close(v, v2, 2e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (QK_PM + softmax + SV_PM fused)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,hd,causal,bq,bkv", [
+    (100, 32, True, 32, 32), (100, 32, False, 64, 32),
+    (64, 64, True, 64, 64), (130, 16, True, 32, 64)])
+def test_flash_attention(S, hd, causal, bq, bkv):
+    BH = 3
+    q, k, v = (_rnd(9 + i, BH, S, hd) for i in range(3))
+    got = fak.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    _assert_close(got, want, 3e-2)
+
+
+def test_flash_attention_block_invariance():
+    q, k, v = (_rnd(20 + i, 2, 96, 32, dt=jnp.float32) for i in range(3))
+    outs = [fak.flash_attention(q, k, v, causal=True, bq=bq, bkv=bkv,
+                                interpret=True)
+            for bq, bkv in [(32, 32), (96, 32), (32, 96), (96, 96)]]
+    for o in outs[1:]:
+        _assert_close(o, outs[0], 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(2, 48), skv=st.integers(2, 48), seed=st.integers(0, 99))
+def test_flash_attention_property(sq, skv, seed):
+    """Cross-attention shapes (Sq != Skv), non-causal: rows are convex
+    combinations of V rows -> output within [min(V), max(V)] per dim."""
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, sq, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, skv, 16),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, skv, 16),
+                          jnp.float32)
+    got = fak.flash_attention(q, k, v, causal=False, bq=16, bkv=16,
+                              interpret=True)
+    _assert_close(got, ref.flash_attention_ref(q, k, v, causal=False), 1e-3)
+    assert np.all(np.asarray(got) <= np.asarray(v).max(axis=1, keepdims=True)
+                  + 1e-4)
+    assert np.all(np.asarray(got) >= np.asarray(v).min(axis=1, keepdims=True)
+                  - 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ffn (FFN_PM + bias + activation)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("act", ["relu", "gelu"])
+def test_ffn1(act):
+    x, w1 = _rnd(30, 64, 96), _rnd(31, 96, 200)
+    b1 = _rnd(32, 200, dt=jnp.float32)
+    _assert_close(ops.ffn1(x, w1, b1, act), ref.ffn1_ref(x, w1, b1, act),
+                  2e-2)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "geglu"])
+def test_ffn1_gated(act):
+    x, w1, wg = _rnd(33, 64, 96), _rnd(34, 96, 200), _rnd(35, 96, 200)
+    _assert_close(ops.ffn1_gated(x, w1, wg, act),
+                  ref.ffn1_gated_ref(x, w1, wg, act), 3e-2)
+
+
+# ---------------------------------------------------------------------------
+# layernorm / rmsnorm (LN unit, Alg. 8)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,D", [(50, 200), (8, 1024), (3, 65)])
+def test_layernorm(R, D):
+    x = _rnd(40, R, D, dt=jnp.float32)
+    g = 1 + 0.1 * _rnd(41, D, dt=jnp.float32)
+    b = 0.1 * _rnd(42, D, dt=jnp.float32)
+    _assert_close(ops.layernorm(x, g, b), ref.layernorm_ref(x, g, b), 1e-4)
+    _assert_close(ops.rmsnorm(x, g), ref.rmsnorm_ref(x, g), 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(R=st.integers(1, 20), D=st.integers(2, 100), seed=st.integers(0, 99))
+def test_layernorm_property(R, D, seed):
+    """Normalized rows have ~zero mean and ~unit variance when g=1,b=0."""
+    x = 5 * jax.random.normal(jax.random.PRNGKey(seed), (R, D), jnp.float32)
+    y = np.asarray(ops.layernorm(x, jnp.ones(D), jnp.zeros(D)), np.float64)
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-3)
+    np.testing.assert_allclose(y.var(-1), 1.0, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# int8_matmul (fixed-point path, C6)
+# ---------------------------------------------------------------------------
+def test_int8_matmul_vs_float():
+    w = _rnd(50, 128, 96, dt=jnp.float32)
+    x = _rnd(51, 32, 128)
+    got = ops.quantized_dense(x, quantize(w))
+    want = ref.tiled_matmul_ref(x, w.astype(jnp.bfloat16))
+    _assert_close(got, want, 5e-2)
+
+
+def test_int8_matmul_vs_int_ref():
+    """Kernel must match the integer reference bit-for-bit in accumulation."""
+    from repro.kernels import int8_matmul as i8
+    qx = jax.random.randint(jax.random.PRNGKey(52), (32, 64), -127, 128,
+                            jnp.int8)
+    qw = jax.random.randint(jax.random.PRNGKey(53), (64, 48), -127, 128,
+                            jnp.int8)
+    sx = jnp.float32(0.013)
+    sw = jax.random.uniform(jax.random.PRNGKey(54), (48,), jnp.float32,
+                            0.001, 0.02)
+    got = i8.int8_matmul(qx, sx, qw, sw, bm=32, bk=32, bn=32, interpret=True,
+                         out_dtype=jnp.float32)
+    want = ref.int8_matmul_ref(qx, sx, qw, sw, out_dtype=jnp.float32)
+    _assert_close(got, want, 1e-6)

@@ -1,0 +1,60 @@
+"""Masked primitives == dense primitives on the live slice (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking
+
+
+@settings(max_examples=25, deadline=None)
+@given(d_max=st.integers(4, 64), frac=st.floats(0.2, 1.0),
+       seed=st.integers(0, 999))
+def test_masked_layernorm_matches_dense_slice(d_max, frac, seed):
+    d_live = max(2, int(d_max * frac))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 5, d_max))
+    g = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (d_max,))
+    b = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 2), (d_max,))
+    got = masking.masked_layernorm(x, g, b, jnp.int32(d_live))
+    xs = x[..., :d_live]
+    mu = xs.mean(-1, keepdims=True)
+    var = ((xs - mu) ** 2).mean(-1, keepdims=True)
+    want = (xs - mu) * jax.lax.rsqrt(var + 1e-5) * g[:d_live] + b[:d_live]
+    np.testing.assert_allclose(np.asarray(got[..., :d_live]),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+    assert np.all(np.asarray(got[..., d_live:]) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d_max=st.integers(4, 64), frac=st.floats(0.2, 1.0),
+       seed=st.integers(0, 999))
+def test_masked_rmsnorm(d_max, frac, seed):
+    d_live = max(2, int(d_max * frac))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, d_max))
+    g = jnp.ones(d_max)
+    got = masking.masked_rmsnorm(x, g, jnp.int32(d_live))
+    xs = x[..., :d_live]
+    want = xs * jax.lax.rsqrt((xs ** 2).mean(-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(got[..., :d_live]),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 40), frac=st.floats(0.1, 1.0),
+       seed=st.integers(0, 999))
+def test_masked_softmax(n, frac, seed):
+    live = max(1, int(n * frac))
+    s = jax.random.normal(jax.random.PRNGKey(seed), (2, n)) * 3
+    got = masking.masked_softmax(s, jnp.int32(live))
+    want = jax.nn.softmax(s[:, :live], axis=-1)
+    np.testing.assert_allclose(np.asarray(got[:, :live]), np.asarray(want),
+                               atol=1e-5)
+    assert np.all(np.asarray(got[:, live:]) == 0.0)
+    np.testing.assert_allclose(np.asarray(got.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_masked_mean_pool():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(1, 6, 4)
+    got = masking.masked_mean_pool(x, jnp.int32(3))
+    want = x[:, :3].mean(1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

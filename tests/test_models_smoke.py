@@ -1,0 +1,88 @@
+"""Per-arch smoke tests: a reduced same-family config runs one forward +
+one train step on CPU; output shapes correct, no NaNs.  Covers all 10
+assigned architectures plus the paper's own three networks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.configs import ASSIGNED, PAPER_NETWORKS
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (TrainStepConfig, init_state,
+                                       make_step_fn)
+
+ALL_NAMES = [c.name for c in ASSIGNED] + [c.name for c in PAPER_NETWORKS]
+
+
+def _batch(cfg, B=2, S=16, key=0):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if cfg.encdec is not None:
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1),
+            (B, cfg.encdec.encoder_seq_len, cfg.d_model)).astype(jnp.bfloat16)
+    elif cfg.frontend is not None:
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1),
+            (B, cfg.frontend.num_tokens, cfg.d_model)).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = reduced_cfg(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_train_step_finite(name):
+    cfg = reduced_cfg(name)
+    model = Model(cfg)
+    oc = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_state(model, jax.random.PRNGKey(0), oc)
+    step = jax.jit(make_step_fn(model, TrainStepConfig(optimizer=oc)))
+    state, metrics = step(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"])), f"{name}: non-finite loss"
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(bool(jnp.any(a != b)) for a, b in zip(
+        jax.tree.leaves(state.params),
+        jax.tree.leaves(Model(cfg).init(jax.random.PRNGKey(0)))))
+    assert moved
+
+
+@pytest.mark.parametrize("name", [c.name for c in ASSIGNED
+                                  if c.family != "encoder"])
+def test_decode_step_finite(name):
+    cfg = reduced_cfg(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 16)
+    logits, cache2 = model.decode_step(
+        params, cache, jnp.ones((2, 1), jnp.int32), jnp.int32(3))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure is stable across steps (jit-compatible)
+    jax.tree.map(lambda a, b: None if (a.shape, a.dtype) == (b.shape, b.dtype)
+                 else pytest.fail("cache changed structure"), cache, cache2)
+
+
+def test_abstract_matches_init_shapes():
+    """ShapeDtypeStruct tree (dry-run) is structurally identical to real
+    params for every assigned arch."""
+    for c in ASSIGNED:
+        cfg = reduced_cfg(c.name)
+        model = Model(cfg)
+        real = model.init(jax.random.PRNGKey(0))
+        abstract = model.abstract()
+        jax.tree.map(
+            lambda r, a: None if (r.shape, r.dtype) == (a.shape, a.dtype)
+            else pytest.fail(f"{c.name}: abstract/init mismatch"),
+            real, abstract)

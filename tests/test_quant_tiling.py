@@ -1,0 +1,72 @@
+"""Quantization (C6) and the tile planner (C2/C5) invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (dequantize, quantization_error, quantize,
+                              quantize_tree)
+from repro.core.tiling import TilePlan, plan_matmul, sweep
+from repro.core.analytical import V5E
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 64),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 999))
+def test_quant_roundtrip_bounded(rows, cols, scale, seed):
+    w = scale * jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    q = quantize(w)
+    back = dequantize(q)
+    amax = np.abs(np.asarray(w)).max(axis=0)
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    # per-channel symmetric int8: |err| <= scale/2 = amax/254 per column
+    assert np.all(err <= amax[None, :] / 254.0 + 1e-7)
+
+
+def test_quant_relative_error_small():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 256))
+    assert quantization_error(w) < 0.01
+
+
+def test_quantize_tree_skips_small_leaves():
+    params = {"w": jnp.ones((128, 64)), "bias": jnp.ones((64,)),
+              "norm": {"scale": jnp.ones((8,))}}
+    qt, meta = quantize_tree(params, min_size=1024)
+    assert meta["w"] is True and meta["bias"] is False
+    assert meta["norm"]["scale"] is False
+
+
+# ---------------------------------------------------------------------------
+# Tile planner (§3.10)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(M=st.integers(1, 8192), K=st.integers(1, 8192), N=st.integers(1, 8192))
+def test_plan_fits_vmem_budget(M, K, N):
+    p = plan_matmul(M, K, N)
+    assert p.vmem_bytes <= V5E.vmem_bytes or (p.bm, p.bk, p.bn) == (128,) * 3
+    assert p.bm % 8 == 0 and p.bn % 8 == 0 and p.bk % 8 == 0
+
+
+def test_plan_beats_or_ties_all_fitting_candidates():
+    """The planner's §3.10 objective: no fitting candidate is faster."""
+    M, K, N = 4096, 768, 3072
+    best = plan_matmul(M, K, N)
+    for cand in sweep(M, K, N):
+        if cand.vmem_bytes <= V5E.vmem_bytes:
+            assert best.t_total <= cand.t_total + 1e-12
+
+
+def test_bigger_tiles_less_hbm_traffic():
+    """Fig. 13's monotonicity: growing bm/bn cuts re-streaming."""
+    small = TilePlan(bm=128, bk=128, bn=128, M=4096, K=4096, N=4096)
+    big = TilePlan(bm=512, bk=128, bn=512, M=4096, K=4096, N=4096)
+    assert big.hbm_traffic < small.hbm_traffic
+
+
+def test_misaligned_occupancy_penalty():
+    """The paper's odd custom-encoder dims (200/3 heads) must show the
+    alignment penalty the planner is built around."""
+    odd = TilePlan(bm=128, bk=128, bn=128, M=64, K=200, N=66)
+    aligned = TilePlan(bm=128, bk=128, bn=128, M=128, K=256, N=128)
+    assert odd.mxu_occupancy < aligned.mxu_occupancy
+    assert aligned.mxu_occupancy == 1.0

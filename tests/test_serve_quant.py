@@ -1,0 +1,78 @@
+"""int8 serving quantization (paper C6 at deployment): numerics + trees."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.quant import QTensor
+from repro.core.serve_quant import (quantize_abstract, quantize_axes,
+                                    quantize_params)
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qp = quantize_params(params, min_size=1024)
+    return cfg, model, params, qp
+
+
+def test_quantizes_kernels_and_tables(setup):
+    _, _, _, qp = setup
+    n = sum(1 for l in jax.tree_util.tree_leaves(
+        qp, is_leaf=lambda x: isinstance(x, QTensor))
+        if isinstance(l, QTensor))
+    assert n >= 5  # qkv/o/ffn kernels + embed table
+
+
+def test_int8_forward_close_to_f32(setup):
+    cfg, model, params, qp = setup
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12),
+                                          0, cfg.vocab_size)}
+    ref = model.forward(params, batch)
+    got = model.forward(qp, batch)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.08, rel
+
+
+def test_int8_decode_matches_int8_forward(setup):
+    cfg, model, params, qp = setup
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              cfg.vocab_size)
+    full = model.forward(qp, {"tokens": toks})
+    cache = model.init_cache(2, 8)
+    errs = []
+    for t in range(8):
+        lg, cache = model.decode_step(qp, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(errs) < 2e-2 * float(jnp.abs(full).max())
+
+
+def test_abstract_and_axes_trees_match(setup):
+    cfg, model, _, qp = setup
+    qa = quantize_abstract(model.abstract(), min_size=1024)
+    assert jax.tree_util.tree_structure(qp) == \
+        jax.tree_util.tree_structure(qa)
+    # shapes/dtypes agree leaf-wise
+    jax.tree_util.tree_map(
+        lambda r, a: None if (r.shape, r.dtype) == (a.shape, a.dtype)
+        else pytest.fail(f"{r.shape}/{r.dtype} vs {a.shape}/{a.dtype}"),
+        qp, qa)
+    # axes tree has one PartitionSpec per abstract leaf
+    from jax.sharding import PartitionSpec as P
+    qx = quantize_axes(model.axes(), model.abstract(), min_size=1024)
+    n_ax = len(jax.tree_util.tree_leaves(
+        qx, is_leaf=lambda x: isinstance(x, P)))
+    n_ab = len(jax.tree_util.tree_leaves(qa))
+    assert n_ax == n_ab
+
+
+def test_stacked_kernel_scale_keeps_layer_dim(setup):
+    _, model, _, qp = setup
+    wq = qp["layers"]["attn"]["wq"]["kernel"]
+    assert isinstance(wq, QTensor)
+    # stacked [L, K, N] kernel -> per-(layer, column) scales [L, 1, N]
+    assert wq.scale.shape == (wq.values.shape[0], 1, wq.values.shape[2])
