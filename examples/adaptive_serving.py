@@ -5,6 +5,9 @@ then the paper's three evaluation networks — a BERT variant, the shallow
 transformer (Table 1 net #1) and the custom encoder (Fig. 11 net) — run
 back-to-back by reprogramming the topology registers.  Zero retraces.
 
+The decode-side counterpart (one compiled step serving many *requests*
+with device-resident continuous batching) is ``continuous_batching.py``.
+
     PYTHONPATH=src python examples/adaptive_serving.py
 """
 import time

@@ -1,0 +1,55 @@
+"""Device-resident continuous batching: the serving-side Alg. 18.
+
+The adaptive fabric demo (``adaptive_serving.py``) shows one compiled
+encoder serving many *topologies*; this demo shows one compiled decode
+step serving many *requests*: all per-slot state (last token, cache
+index, budget, eos/done flags, generated tokens) lives on device, the
+fused decode step compiles exactly once, and the host only dispatches —
+with ``sync_every=k`` it reads back a single (done, count) vector pair
+every k tokens, no matter how many slots are live.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+
+from repro.configs import REGISTRY, reduced
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+def main() -> None:
+    cfg = reduced(REGISTRY["qwen1.5-0.5b"])
+    model = Model(cfg)
+    eng = ServingEngine(model, max_batch=4, max_len=128,
+                        sampling=SamplingParams(temperature=0.7, top_k=20))
+    eng.load(model.init(jax.random.PRNGKey(0)))
+
+    # a mixed-length request wave: more requests than slots, so slots are
+    # continuously recycled as requests finish
+    rng = jax.random.PRNGKey(1)
+    for i in range(10):
+        rng, k = jax.random.split(rng)
+        plen = int(jax.random.randint(k, (), 3, 40))
+        eng.submit(list(range(1, plen + 1)), max_new_tokens=8 + 2 * (i % 5))
+
+    t0 = time.time()
+    done = eng.run_to_completion(sync_every=8)
+    dt = time.time() - t0
+
+    total = sum(len(r.generated) for r in done)
+    print(f"{len(done)} requests, {total} tokens in {dt:.2f}s")
+    for r in sorted(done, key=lambda r: r.uid)[:4]:
+        print(f"  req {r.uid}: prompt_len={len(r.prompt):2d} "
+              f"-> {r.generated[:8]}...")
+    print(f"compile accounting: {eng.compilations} "
+          f"(fused decode must be 1)")
+    print(f"host traffic: {eng.stats['device_gets']} bulk device_gets for "
+          f"{eng.stats['decode_steps']} decode steps "
+          f"(seed engine: ~{2 * eng.max_batch} scalar syncs per step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distributed.collectives import axis_size
+
 
 class EFState(NamedTuple):
     """Per-leaf error-feedback residual, shaped like the local grad shard."""
@@ -45,7 +47,7 @@ def compressed_allreduce(g: jax.Array, ef: EFState, axis_name: str,
     The EF residual has the shape of the local reduce-scatter shard
     (padded flat size / axis size).
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     flat = g.reshape(-1).astype(jnp.float32)
     pad = (-flat.size) % n
     if pad:

@@ -19,12 +19,14 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.distributed.collectives import axis_size
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
 def _shift_right(x: jax.Array, axis_name: str) -> jax.Array:
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     return lax.ppermute(x, axis_name, [(i, (i + 1) % n) for i in range(n)])
 
 
@@ -36,7 +38,7 @@ def pipeline_forward(stage_fn: Callable, stage_params, x: jax.Array, *,
     by shard_map).  x: [n_micro, mb, ...] microbatched input, replicated.
     Returns [n_micro, mb, ...] outputs of the *last* stage, replicated.
     """
-    n_stages = lax.axis_size(axis_name)
+    n_stages = axis_size(axis_name)
     stage_idx = lax.axis_index(axis_name)
     n_micro = x.shape[0]
     total = n_micro + n_stages - 1

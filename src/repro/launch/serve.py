@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--sync-every", type=int, default=4,
+                    help="fused decode steps dispatched between host syncs")
+    ap.add_argument("--kernels", choices=("xla", "pallas"), default="xla",
+                    help="matmul routing for prefill/decode")
     args = ap.parse_args()
 
     cfg = reduced(REGISTRY[args.arch])
@@ -31,7 +35,8 @@ def main() -> None:
     eng = ServingEngine(model, max_batch=args.max_batch,
                         max_len=args.max_len,
                         sampling=SamplingParams(temperature=args.temperature,
-                                                top_k=40))
+                                                top_k=40),
+                        matmul_backend=args.kernels)
     eng.load(model.init(jax.random.PRNGKey(0)))
 
     rng = jax.random.PRNGKey(7)
@@ -42,12 +47,14 @@ def main() -> None:
         eng.submit(prompt, max_new_tokens=args.max_new)
 
     t0 = time.time()
-    done = eng.run_to_completion()
+    done = eng.run_to_completion(sync_every=args.sync_every)
     dt = time.time() - t0
     total_new = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new / dt:,.0f} tok/s)")
     print("compile accounting:", eng.compilations)
+    print(f"host traffic: {eng.stats['device_gets']} bulk device_gets over "
+          f"{eng.stats['decode_steps']} fused decode steps")
     for r in done[:3]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} "
               f"-> {r.generated[:10]}...")

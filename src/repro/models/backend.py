@@ -31,6 +31,11 @@ def _impl() -> str:
     return getattr(_state, "impl", "xla")
 
 
+def active_impl() -> str:
+    """The matmul implementation in effect for the current (trace) scope."""
+    return _impl()
+
+
 def _faithful() -> bool:
     return getattr(_state, "faithful", False)
 

@@ -76,6 +76,15 @@ def dense(x: jax.Array, w, bias: jax.Array | None = None) -> jax.Array:
     from repro.core.quant import QTensor
 
     if isinstance(w, QTensor):
+        if backend.active_impl() == "pallas" and w.values.ndim == 2:
+            # deployment path: dynamic activation quant + the C6 int8
+            # Pallas kernel — the weight never leaves int8 on the wire
+            from repro.kernels import ops
+
+            y = ops.quantized_dense(x, w)
+            if bias is not None:
+                y = y + bias.astype(y.dtype)
+            return y
         w = w.values.astype(x.dtype) * w.scale.astype(x.dtype)
     y = backend.matmul(x, w)
     if bias is not None:

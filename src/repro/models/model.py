@@ -17,6 +17,7 @@ with per-family state (KV / MLA latent / SSM / rolling window).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any
@@ -27,6 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
+from repro.models import backend
 from repro.models import layers, moe, rglru, ssm
 from repro.models.attention import KVCache, MLACache
 from repro.models.params import ParamBuilder
@@ -34,6 +36,16 @@ from repro.models.params import ParamBuilder
 
 def _is_causal(cfg: ArchConfig) -> bool:
     return cfg.family != "encoder"
+
+
+def _with_backend(fn):
+    """Run a model entry point under its configured matmul backend (the
+    routing is read at trace time, so jitted callers bake it in)."""
+    @functools.wraps(fn)
+    def wrapped(self, *args, **kwargs):
+        with self._mm_ctx():
+            return fn(self, *args, **kwargs)
+    return wrapped
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +65,22 @@ class ModelOptions:
     # Decode attention: GQA-grouped contraction (no repeat_kv copy of the
     # KV cache to the full head count) — §Perf optimization.
     grouped_gqa: bool = False
+    # Matmul routing for every dense in this model: "xla" (default) or
+    # "pallas" (the ADAPTOR tiled kernels; int8 weights take the C6
+    # int8_matmul path).  Applied at trace time, so jitted callers bake
+    # the choice into their compiled executable.
+    matmul_backend: str = "xla"
 
 
 class Model:
     def __init__(self, cfg: ArchConfig, options: ModelOptions | None = None):
         self.cfg = cfg
         self.opt = options or ModelOptions()
+
+    def _mm_ctx(self):
+        if self.opt.matmul_backend != "xla":
+            return backend.use(self.opt.matmul_backend)
+        return contextlib.nullcontext()
 
     # ------------------------------------------------------------------
     # Parameter construction (init / abstract / axes via ParamBuilder)
@@ -327,6 +349,7 @@ class Model:
     # ------------------------------------------------------------------
     # Forward (train / prefill)
     # ------------------------------------------------------------------
+    @_with_backend
     def forward(self, params: dict, batch: dict) -> jax.Array:
         """Full-sequence forward -> logits [B, S, vocab] (f32)."""
         return self._unembed(params, self._backbone(params, batch))
@@ -381,6 +404,7 @@ class Model:
     # ------------------------------------------------------------------
     # Loss (train step body)
     # ------------------------------------------------------------------
+    @_with_backend
     def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         x = self._backbone(params, batch)
@@ -470,6 +494,7 @@ class Model:
         return kv(cfg.num_layers, max_len, cfg.num_kv_heads,
                   cfg.resolved_head_dim)
 
+    @_with_backend
     def prefill(self, params: dict, batch: dict, max_len: int):
         """Prompt -> (logits [B,S,V], decode cache ready at index S).
 
@@ -550,6 +575,7 @@ class Model:
                 cache = main_cache
         return self._unembed(params, x), cache
 
+    @_with_backend
     def decode_step(self, params: dict, cache, tokens: jax.Array,
                     cache_index: jax.Array):
         """tokens: [B, 1] -> (logits [B, 1, vocab], new cache).

@@ -1,4 +1,4 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Batched serving engine with device-resident continuous batching.
 
 Compile-once discipline (the paper's Alg. 18 applied to serving):
 
@@ -7,22 +7,32 @@ Compile-once discipline (the paper's Alg. 18 applied to serving):
   B=1, and its cache is scattered into a free slot of the shared batched
   cache.  Buckets bound the number of compilations the way the paper's
   maxima bound the fabric.
-* ``decode_fn``   — compiled exactly once: all slots advance together
-  with per-slot cache indices; idle slots compute masked garbage (idle
-  PEs) that never reaches a live output.
+* ``decode_fn``   — compiled exactly once, and *fused*: model decode,
+  sampling, per-slot index/budget/eos bookkeeping and the generated-token
+  scatter all run in a single jitted step.  Idle slots compute masked
+  garbage (idle PEs) that never reaches a live output.
 
-Per-request state stays on the host; all device state is two pytrees
-(params, batched cache) plus the per-slot index vector.
+Host↔device discipline (the paper's "no host intervention beyond the
+topology registers"): **all** per-slot state — last sampled token, cache
+position, remaining budget, eos id, active/done flags, and the generated
+token ring — lives in device arrays (``SlotState``).  The host only
+*dispatches* the fused step and harvests finished requests with one bulk
+``device_get`` of the (done, count) vectors per sync — O(1) transfers
+per step regardless of ``max_batch``, versus the seed engine's
+O(max_batch) scalar round trips per decoded token.
+``run_to_completion(sync_every=k)`` stretches that further: k fused
+steps are dispatched back-to-back with no host read at all in between.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import backend
 from repro.models.model import Model
 from repro.serving.sampling import SamplingParams, sample
 
@@ -38,6 +48,20 @@ class Request:
     slot: int | None = None
 
 
+class SlotState(NamedTuple):
+    """All per-slot decode state, resident on device (one pytree)."""
+
+    last: jax.Array    # [B, 1] i32  token fed to the next decode step
+    index: jax.Array   # [B]    i32  cache write position
+    active: jax.Array  # [B]    bool slot is decoding
+    done: jax.Array    # [B]    bool finished, not yet harvested/reused
+    budget: jax.Array  # [B]    i32  max_new_tokens (incl. prefill token)
+    count: jax.Array   # [B]    i32  tokens generated so far
+    eos: jax.Array     # [B]    i32  eos id, -1 = none
+    buf: jax.Array     # [B, max_len] i32 generated tokens
+    rng: jax.Array     # PRNG key threaded through the fused step
+
+
 def _buckets(max_len: int, smallest: int = 32) -> list[int]:
     out, b = [], smallest
     while b < max_len:
@@ -51,7 +75,8 @@ class ServingEngine:
     def __init__(self, model: Model, *, max_batch: int = 8,
                  max_len: int = 512,
                  sampling: SamplingParams = SamplingParams(),
-                 rng: jax.Array | None = None):
+                 rng: jax.Array | None = None,
+                 matmul_backend: str | None = None):
         cfg = model.cfg
         if cfg.family == "encoder":
             raise ValueError("encoder-only archs have no decode step")
@@ -60,37 +85,73 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampling = sampling
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.buckets = _buckets(max_len)
+        # engine-level kernel routing ("xla" | "pallas"); None inherits the
+        # model's ModelOptions.matmul_backend.  An explicit engine setting
+        # must win even over a pallas-configured model, so tracing goes
+        # through a shadow Model carrying the effective backend (nested
+        # backend.use() contexts would let the model's innermost win).
+        self.matmul_backend = matmul_backend or model.opt.matmul_backend
+        if self.matmul_backend == model.opt.matmul_backend:
+            self._traced_model = model
+        else:
+            self._traced_model = Model(model.cfg, dataclasses.replace(
+                model.opt, matmul_backend=self.matmul_backend))
 
         self.params: Any = None
         self.cache: Any = None
-        self.indices = jnp.zeros((max_batch,), jnp.int32)
+        self.state: SlotState = self._init_state(
+            rng if rng is not None else jax.random.PRNGKey(0))
         self.slot_req: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self._uid = 0
+        # host↔device traffic accounting (asserted O(1)/step by the tests)
+        self.stats = {"decode_steps": 0, "device_gets": 0}
 
         self._decode = jax.jit(self._decode_impl)
         self._prefill = {}   # bucket -> jitted fn
         self._insert = jax.jit(self._insert_impl, static_argnums=(3,))
+        self._admit_slot = jax.jit(self._admit_slot_impl)
 
     # ------------------------------------------------------------------
+    def _init_state(self, rng: jax.Array) -> SlotState:
+        B = self.max_batch
+        return SlotState(
+            last=jnp.zeros((B, 1), jnp.int32),
+            index=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            done=jnp.zeros((B,), bool),
+            budget=jnp.zeros((B,), jnp.int32),
+            count=jnp.zeros((B,), jnp.int32),
+            eos=jnp.full((B,), -1, jnp.int32),
+            buf=jnp.zeros((B, self.max_len), jnp.int32),
+            rng=rng)
+
     def load(self, params) -> None:
         self.params = params
         self.cache = self.model.init_cache(self.max_batch, self.max_len)
 
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
                eos_id: int | None = None) -> int:
+        if len(prompt) > self.max_len:
+            # reject at the door: raising later, mid-drain, would abort
+            # run_to_completion with live requests still in flight
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"max_len={self.max_len}")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
                                   eos_id))
         return self._uid
 
     # ------------------------------------------------------------------
+    # jitted impls (traced under the configured matmul backend)
+    # ------------------------------------------------------------------
     def _prefill_impl(self, bucket: int, params, tokens, extras):
-        batch = {"tokens": tokens, **extras}
-        logits, cache = self.model.prefill(params, batch, max_len=self.max_len)
-        return logits, cache
+        with backend.use(self.matmul_backend):
+            batch = {"tokens": tokens, **extras}
+            logits, cache = self._traced_model.prefill(params, batch,
+                                                       max_len=self.max_len)
+            return logits, cache
 
     def _insert_impl(self, global_cache, one_cache, slot, _bucket):
         def put(g, o):
@@ -100,11 +161,59 @@ class ServingEngine:
             return g.at[slot].set(o[0])                # [B, ...] per-layer
         return jax.tree.map(put, global_cache, one_cache)
 
-    def _decode_impl(self, params, cache, tokens, indices, rng):
-        logits, cache = self.model.decode_step(params, cache, tokens, indices)
-        toks = sample(logits[:, 0], rng, self.sampling)
-        return toks, cache
+    def _admit_slot_impl(self, state: SlotState, last_logits, slot, plen,
+                         budget, eos) -> SlotState:
+        """Seat one prefilled request: sample its first token and reset
+        every per-slot field — all on device, no host round trip."""
+        rng, k = jax.random.split(state.rng)
+        first = sample(last_logits, k, self.sampling)[0]
+        fin = budget <= 1   # a 1-token budget is spent by the prefill sample
+        return SlotState(
+            last=state.last.at[slot, 0].set(first),
+            index=state.index.at[slot].set(plen),
+            active=state.active.at[slot].set(~fin),
+            done=state.done.at[slot].set(fin),
+            budget=state.budget.at[slot].set(budget),
+            count=state.count.at[slot].set(1),
+            eos=state.eos.at[slot].set(eos),
+            buf=state.buf.at[slot].set(0).at[slot, 0].set(first),
+            rng=rng)
 
+    def _decode_impl(self, params, cache, state: SlotState):
+        """The fused device step: decode -> sample -> scatter token ->
+        advance indices/budgets -> raise done flags.  One dispatch, zero
+        host syncs."""
+        with backend.use(self.matmul_backend):
+            rng, k = jax.random.split(state.rng)
+            logits, cache = self._traced_model.decode_step(
+                params, cache, state.last, state.index)
+            toks = sample(logits[:, 0], k, self.sampling)
+
+            act = state.active
+            act_i = act.astype(jnp.int32)
+            rows = jnp.arange(self.max_batch)
+            pos = jnp.minimum(state.count, self.max_len - 1)
+            buf = state.buf.at[rows, pos].set(
+                jnp.where(act, toks, state.buf[rows, pos]))
+            count = state.count + act_i
+            index = state.index + act_i
+            hit_eos = act & (state.eos >= 0) & (toks == state.eos)
+            finish = act & (hit_eos | (count >= state.budget)
+                            | (index >= self.max_len - 1))
+            state = SlotState(
+                last=jnp.where(act[:, None], toks[:, None], state.last),
+                index=index,
+                active=act & ~finish,
+                done=state.done | finish,
+                budget=state.budget,
+                count=count,
+                eos=state.eos,
+                buf=buf,
+                rng=rng)
+            return cache, state
+
+    # ------------------------------------------------------------------
+    # host-side control (dispatch-only between syncs)
     # ------------------------------------------------------------------
     def _admit(self) -> None:
         for slot in range(self.max_batch):
@@ -112,7 +221,10 @@ class ServingEngine:
                 continue
             req = self.queue.pop(0)
             plen = len(req.prompt)
-            bucket = next(b for b in self.buckets if b >= plen)
+            bucket = next((b for b in self.buckets if b >= plen), None)
+            if bucket is None:
+                raise ValueError(
+                    f"prompt length {plen} exceeds max_len={self.max_len}")
             if bucket not in self._prefill:
                 self._prefill[bucket] = jax.jit(
                     lambda p, t, e, _b=bucket: self._prefill_impl(_b, p, t, e))
@@ -125,53 +237,65 @@ class ServingEngine:
                     jnp.bfloat16)
             logits, one_cache = self._prefill[bucket](self.params, toks, extras)
             self.cache = self._insert(self.cache, one_cache, slot, bucket)
-            self.indices = self.indices.at[slot].set(plen)
-            # first generated token comes from the last prompt position
-            self.rng, k = jax.random.split(self.rng)
-            first = sample(logits[:, plen - 1], k, self.sampling)
-            req.generated.append(int(first[0]))
+            self.state = self._admit_slot(
+                self.state, logits[:, plen - 1], jnp.int32(slot),
+                jnp.int32(plen), jnp.int32(req.max_new_tokens),
+                jnp.int32(-1 if req.eos_id is None else req.eos_id))
             req.slot = slot
             self.slot_req[slot] = req
 
-    def _active(self) -> list[int]:
+    def _occupied(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _dispatch(self) -> None:
+        self.cache, self.state = self._decode(self.params, self.cache,
+                                              self.state)
+        self.stats["decode_steps"] += 1
+
+    def _harvest(self) -> list[Request]:
+        """One bulk device_get of the done/count vectors; token buffers are
+        pulled (one more bulk get) only for slots that actually finished."""
+        done_h, count_h = jax.device_get((self.state.done, self.state.count))
+        self.stats["device_gets"] += 1
+        slots = [i for i in self._occupied() if done_h[i]]
+        if not slots:
+            return []
+        bufs = jax.device_get(self.state.buf[jnp.asarray(slots, jnp.int32)])
+        self.stats["device_gets"] += 1
+        finished = []
+        for row, i in zip(bufs, slots):
+            req = self.slot_req[i]
+            req.generated = [int(t) for t in row[:count_h[i]]]
+            req.done = True
+            self.slot_req[i] = None
+            finished.append(req)
+        return finished
 
     def step(self) -> list[Request]:
         """Admit waiting requests, advance every active slot one token.
         Returns requests completed this step."""
         self._admit()
-        active = self._active()
-        if not active:
+        if not self._occupied():
             return []
-        tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
-        for i in active:
-            tokens = tokens.at[i, 0].set(self.slot_req[i].generated[-1])
-        self.rng, k = jax.random.split(self.rng)
-        next_toks, self.cache = self._decode(self.params, self.cache, tokens,
-                                             self.indices, k)
-        self.indices = self.indices + jnp.asarray(
-            [1 if self.slot_req[i] is not None else 0
-             for i in range(self.max_batch)], jnp.int32)
-        finished = []
-        for i in active:
-            req = self.slot_req[i]
-            tok = int(next_toks[i])
-            req.generated.append(tok)
-            idx = int(self.indices[i])
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if (len(req.generated) >= req.max_new_tokens or hit_eos
-                    or idx >= self.max_len - 1):
-                req.done = True
-                finished.append(req)
-                self.slot_req[i] = None
-        return finished
+        self._dispatch()
+        return self._harvest()
 
-    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+    def run_to_completion(self, max_steps: int = 10_000,
+                          sync_every: int = 1) -> list[Request]:
+        """Drain queue + slots.  ``sync_every=k`` dispatches k fused steps
+        back-to-back before each harvest sync (admission also happens at
+        sync points, so large k trades slot-refill latency for zero host
+        reads in steady state)."""
         done: list[Request] = []
-        for _ in range(max_steps):
-            done += self.step()
-            if not self.queue and not self._active():
+        steps = 0
+        while steps < max_steps:
+            self._admit()
+            if not self._occupied():
                 break
+            for _ in range(min(max(1, sync_every), max_steps - steps)):
+                self._dispatch()
+                steps += 1
+            done += self._harvest()
         return done
 
     @property

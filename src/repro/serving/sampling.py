@@ -21,7 +21,9 @@ def sample(logits: jax.Array, rng: jax.Array,
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     x = logits.astype(jnp.float32) / params.temperature
     if params.top_k:
-        kth = jnp.sort(x, axis=-1)[:, -params.top_k][:, None]
+        # lax.top_k instead of a full-vocab sort: this runs inside the
+        # fused decode step, once per generated token
+        kth = jax.lax.top_k(x, params.top_k)[0][:, -1:]
         x = jnp.where(x < kth, -jnp.inf, x)
     if params.top_p < 1.0:
         sorted_x = jnp.sort(x, axis=-1)[:, ::-1]

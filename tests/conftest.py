@@ -1,9 +1,15 @@
 import dataclasses
+import os
 
-import jax
-import pytest
+# 8 fake CPU devices so the multi-device tests can build real meshes on a
+# single host.  Must be set before jax initializes; single-device tests
+# are unaffected (unsharded jit still runs on device 0).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from repro.configs import REGISTRY, reduced
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import REGISTRY, reduced  # noqa: E402
 
 
 def no_drop(cfg):

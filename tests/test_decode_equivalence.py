@@ -31,16 +31,21 @@ def _inputs(cfg, B=2, S=10):
     return batch
 
 
-@pytest.mark.parametrize("name", FAMS)
-def test_prefill_then_decode_matches_forward(name):
+# default tier-1 runs a reduced sweep (fast cache families, 2 decode
+# steps); the full 7-family x 5-step sweep runs under ``-m slow``
+FAST_FAMS = ["qwen1.5-0.5b", "falcon-mamba-7b", "granite-moe-1b-a400m",
+             "recurrentgemma-2b"]
+
+
+def _check_prefill_then_decode(name: str, steps: int) -> None:
     cfg = reduced_cfg(name, lossless_moe=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    B, S, P = 2, 10, 5
+    B, P = 2, 5
     if cfg.frontend is not None and cfg.encdec is None:
         # vlm: the prompt must cover the patch-embedding positions
         P = max(P, cfg.frontend.num_tokens)
-        S = P + 5
+    S = P + steps
     batch = _inputs(cfg, B, S)
     full = model.forward(params, batch)
     scale = float(jnp.abs(full).max()) + 1e-6
@@ -56,6 +61,17 @@ def test_prefill_then_decode_matches_forward(name):
                                       jnp.int32(t))
         err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
         assert err < tol, f"{name} step {t}: {err} vs {tol}"
+
+
+@pytest.mark.parametrize("name", FAST_FAMS)
+def test_prefill_then_decode_matches_forward(name):
+    _check_prefill_then_decode(name, steps=2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", FAMS)
+def test_prefill_then_decode_matches_forward_full(name):
+    _check_prefill_then_decode(name, steps=5)
 
 
 def test_per_slot_vector_indices():

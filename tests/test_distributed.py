@@ -25,9 +25,19 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # ---------------------------------------------------------------------------
 # In-process: rule resolution (no devices needed — uses AbstractMesh)
 # ---------------------------------------------------------------------------
-def _mesh_16x16():
+def _abstract_mesh(*name_size_pairs):
+    """AbstractMesh across JAX versions: the current API takes
+    ``((name, size), ...)`` pairs; older releases took (shape, names)."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh(tuple(name_size_pairs))
+    except TypeError:  # pre-0.4.36 signature
+        names, sizes = zip(*name_size_pairs)
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
+def _mesh_16x16():
+    return _abstract_mesh(("data", 16), ("model", 16))
 
 
 def test_resolve_divisible_axes():
@@ -53,8 +63,7 @@ def test_resolve_no_axis_reuse():
 
 
 def test_strategy_for_mesh_multi_pod():
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = _abstract_mesh(("pod", 2), ("data", 16), ("model", 16))
     s = shd.strategy_for_mesh(mesh)
     assert s.dp_axes == ("pod", "data") and s.tp_axis == "model"
 
@@ -74,7 +83,7 @@ def test_compression_wire_bytes_save():
 # Subprocess: 8 fake devices
 # ---------------------------------------------------------------------------
 _SUBPROCESS_SCRIPT = r"""
-import os
+import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
@@ -82,6 +91,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+B, S = int(sys.argv[1]), int(sys.argv[2])
+train_only = len(sys.argv) > 3 and sys.argv[3] == "train_only"
 results = {}
 
 # --- 1. sharded train step == single-device train step ---------------------
@@ -96,7 +107,7 @@ cfg = reduced(get_config("qwen1.5-0.5b"))
 model = Model(cfg)
 oc = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
 state = init_state(model, jax.random.PRNGKey(0), oc)
-toks = jax.random.randint(jax.random.PRNGKey(1), (8, 17), 0, cfg.vocab_size)
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
 batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
 
 single = jax.jit(make_step_fn(model, TrainStepConfig(optimizer=oc)))
@@ -115,6 +126,10 @@ results["train_loss_diff"] = abs(float(m1["loss"]) - float(m2["loss"]))
 diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
          for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params))]
 results["train_param_diff"] = max(diffs)
+
+if train_only:
+    print("RESULTS" + json.dumps(results))
+    sys.exit(0)
 
 # --- 2. ring collectives == native psum ------------------------------------
 from repro.distributed.collectives import ring_allreduce, ring_reduce_scatter
@@ -182,11 +197,11 @@ print("RESULTS" + json.dumps(results))
 """
 
 
-@pytest.fixture(scope="module")
-def sub_results():
+def _run_subprocess(batch: int, seq: int, *extra: str) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT,
+                           str(batch), str(seq), *extra],
                           capture_output=True, text=True, env=env,
                           timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
@@ -194,9 +209,22 @@ def sub_results():
     return json.loads(line[len("RESULTS"):])
 
 
+@pytest.fixture(scope="module")
+def sub_results():
+    # reduced default sizes; the full-size train step runs under -m slow
+    return _run_subprocess(8, 9)
+
+
 def test_sharded_train_step_matches_single(sub_results):
     assert sub_results["train_loss_diff"] < 1e-3
     assert sub_results["train_param_diff"] < 5e-3
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_full_size():
+    res = _run_subprocess(8, 17, "train_only")
+    assert res["train_loss_diff"] < 1e-3
+    assert res["train_param_diff"] < 5e-3
 
 
 def test_ring_collectives(sub_results):

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # guard: optional test extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quant import quantize
