@@ -1,0 +1,62 @@
+"""Paged KV-cache serving: block-budget admission over a shared pool.
+
+``continuous_batching.py`` recycles *slots*; this demo recycles *memory*:
+the KV cache is a pool of fixed-size token blocks (the paper's tiling
+discipline applied to decode-time memory), a request is admitted the
+moment the blocks for its prompt are free, blocks are appended on the
+fly as decode crosses block boundaries, and a harvested request's blocks
+immediately re-admit the next one.  Per-request sampling (temperature /
+top-k / top-p) rides along as device data — one compiled decode step
+serves the whole mixture.
+
+    PYTHONPATH=src python examples/paged_serving.py
+"""
+import time
+
+import jax
+
+from repro.configs import REGISTRY, reduced
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+def main() -> None:
+    cfg = reduced(REGISTRY["qwen1.5-0.5b"])
+    model = Model(cfg)
+    # a pool of 48 x 16-token blocks = 768 cache tokens: the dense layout
+    # would fit only 6 worst-case rows of 128 in the same bytes, yet 12
+    # slots can be live at once when requests are short
+    eng = ServingEngine(model, max_batch=12, max_len=128,
+                        sampling=SamplingParams(),
+                        cache_layout="paged", block_size=16, num_blocks=48)
+    eng.load(model.init(jax.random.PRNGKey(0)))
+
+    rng = jax.random.PRNGKey(1)
+    for i in range(16):
+        rng, k = jax.random.split(rng)
+        plen = int(jax.random.randint(k, (), 3, 60))
+        # per-request sampling without retracing the fused step
+        sp = SamplingParams(temperature=0.7, top_k=20) if i % 2 else None
+        eng.submit(list(range(1, plen + 1)), max_new_tokens=8 + 2 * (i % 5),
+                   sampling=sp)
+
+    t0 = time.time()
+    peak = 0
+    done = []
+    while eng.queue or eng._occupied():
+        done += eng.step()
+        peak = max(peak, len(eng._occupied()))
+    dt = time.time() - t0
+
+    total = sum(len(r.generated) for r in done)
+    print(f"{len(done)} requests, {total} tokens in {dt:.2f}s; "
+          f"peak concurrency {peak} on a 6-dense-slot memory budget")
+    stats = eng.memory_stats()
+    print(f"pool: {stats.total_blocks} blocks, "
+          f"{eng.stats['preemptions']} preemptions, "
+          f"compile accounting {eng.compilations} (fused decode must be 1)")
+
+
+if __name__ == "__main__":
+    main()

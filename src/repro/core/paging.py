@@ -1,0 +1,143 @@
+"""Paged KV-cache block allocator — the paper's tiling discipline applied
+to decode-time memory.
+
+ADAPTOR bounds on-chip buffers by tiling weight matrices to fixed
+TS x TS blocks; the serving analogue is to tile the *KV cache* along the
+sequence axis into fixed-size token blocks and allocate them on demand.
+A dense ``[max_batch, max_len]`` cache charges every request for the
+worst case; a paged pool of shape ``[num_blocks, block_size, ...]``
+charges each request ``ceil(len / block_size)`` blocks, so admitted
+concurrency is bounded by *actual* demand (arXiv:2208.03646's
+length-adaptive win) and one pool serves any mix of request lengths the
+way NPE's fixed overlay serves varied topologies (arXiv:2104.06535).
+
+Host/device split:
+
+* ``BlockAllocator`` — host-side free-list bookkeeping (which physical
+  block belongs to which slot).  Pure Python, O(1) alloc/free, no jax.
+* block tables — ``[max_batch, blocks_per_slot]`` int32 device array
+  owned by the serving engine; logical block ``i`` of a slot lives in
+  physical pool block ``table[slot, i]``.
+
+Block 0 is the **null block**: never handed out, it absorbs the writes
+of idle slots inside the fused decode step and backs unallocated table
+entries, so the device step needs no host intervention to stay safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+NULL_BLOCK = 0
+
+
+def blocks_for_tokens(num_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``num_tokens`` cache positions."""
+    return max(-(-num_tokens // block_size), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingConfig:
+    """Pool geometry (the 'synthesis parameters' of the KV memory).
+
+    ``num_blocks`` counts *usable* blocks; the null block is allocated
+    on top of it, so the pool arrays have ``num_blocks + 1`` rows.
+    """
+
+    block_size: int = 16
+    num_blocks: int = 0
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be positive, got {self.block_size}")
+        if self.num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {self.num_blocks}")
+
+    @property
+    def pool_blocks(self) -> int:
+        """Physical rows in the pool arrays (usable blocks + null block)."""
+        return self.num_blocks + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FragmentationStats:
+    """Pool occupancy + internal fragmentation snapshot."""
+
+    total_blocks: int
+    free_blocks: int
+    used_blocks: int
+    # tokens actually resident vs token capacity of the allocated blocks:
+    # the gap is internal fragmentation (tail of each slot's last block)
+    used_tokens: int
+    capacity_tokens: int
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the pool's usable blocks currently allocated."""
+        return self.used_blocks / max(self.total_blocks, 1)
+
+    @property
+    def internal_fragmentation(self) -> float:
+        """Wasted fraction *inside* allocated blocks (0 when empty)."""
+        if self.capacity_tokens == 0:
+            return 0.0
+        return 1.0 - self.used_tokens / self.capacity_tokens
+
+
+class BlockAllocator:
+    """Free-list allocator over the paged KV pool (host side).
+
+    LIFO free list: a just-freed block is the next handed out, which
+    keeps the hot region of the pool small (HBM page locality).
+    """
+
+    def __init__(self, config: PagingConfig):
+        self.config = config
+        # block 0 is the null block and never enters the free list
+        self._free: list[int] = list(range(config.pool_blocks - 1, 0, -1))
+        self._used_tokens = 0  # engine-reported resident tokens
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.config.num_blocks - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` blocks, or None (and no change) if unavailable."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            return None
+        taken = self._free[len(self._free) - n:]
+        del self._free[len(self._free) - n:]
+        return taken[::-1]
+
+    def free(self, blocks: list[int]) -> None:
+        seen = set(self._free)
+        for b in blocks:
+            if not 0 < b < self.config.pool_blocks:
+                raise ValueError(f"block id {b} outside pool")
+            if b in seen:
+                raise ValueError(f"double free of block {b}")
+            seen.add(b)
+        self._free.extend(reversed(blocks))
+
+    def set_used_tokens(self, n: int) -> None:
+        """Engine hook: tokens currently resident across all slots."""
+        self._used_tokens = n
+
+    def stats(self) -> FragmentationStats:
+        cfg = self.config
+        used = self.num_used
+        return FragmentationStats(
+            total_blocks=cfg.num_blocks,
+            free_blocks=self.num_free,
+            used_blocks=used,
+            used_tokens=self._used_tokens,
+            capacity_tokens=used * cfg.block_size)

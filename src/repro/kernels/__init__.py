@@ -3,6 +3,8 @@
 Paper module -> kernel map:
   QKV_PM (Alg. 9)            -> qkv_proj
   QK_PM + softmax + SV_PM    -> flash_attention (fused, online softmax)
+  paged KV decode            -> paged_attention (block-table gather fused
+                                into the flash-decode grid)
   FFN1/2/3_PM + bias + act   -> ffn (ffn1 / ffn1_gated) + tiled_matmul
   LN unit (Alg. 8)           -> layernorm (layernorm / rmsnorm)
   Fig. 4 tiling discipline   -> tiled_matmul (K-tiled accumulation)

@@ -28,6 +28,12 @@ def main() -> None:
                     help="fused decode steps dispatched between host syncs")
     ap.add_argument("--kernels", choices=("xla", "pallas"), default="xla",
                     help="matmul routing for prefill/decode")
+    ap.add_argument("--cache-layout", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged layout: pool size (default: dense worst case)")
     args = ap.parse_args()
 
     cfg = reduced(REGISTRY[args.arch])
@@ -36,7 +42,10 @@ def main() -> None:
                         max_len=args.max_len,
                         sampling=SamplingParams(temperature=args.temperature,
                                                 top_k=40),
-                        matmul_backend=args.kernels)
+                        matmul_backend=args.kernels,
+                        cache_layout=args.cache_layout,
+                        block_size=args.block_size,
+                        num_blocks=args.num_blocks)
     eng.load(model.init(jax.random.PRNGKey(0)))
 
     rng = jax.random.PRNGKey(7)
@@ -55,6 +64,10 @@ def main() -> None:
     print("compile accounting:", eng.compilations)
     print(f"host traffic: {eng.stats['device_gets']} bulk device_gets over "
           f"{eng.stats['decode_steps']} fused decode steps")
+    if args.cache_layout == "paged":
+        s = eng.memory_stats()
+        print(f"paged pool: {s.total_blocks} x {args.block_size}-token "
+              f"blocks, {eng.stats['preemptions']} preemptions")
     for r in done[:3]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} "
               f"-> {r.generated[:10]}...")

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig
+from repro.core.paging import NULL_BLOCK
 from repro.distributed.sharding import constrain
 from repro.models import layers
 from repro.models.layers import apply_rope, build_dense, apply_dense
@@ -39,7 +40,15 @@ QUERY_BLOCK = 1_024
 
 
 class KVCache(NamedTuple):
-    """Decode-time cache for one attention stack: [B, S_max, n_kv, hd]."""
+    """Decode-time K/V cache for one attention stack.
+
+    Two layouts share this pytree (the cache-layout interface):
+
+    * dense — ``[B, S_max, n_kv, hd]``: one preallocated row per slot.
+    * paged — ``[num_blocks, block_size, n_kv, hd]``: a pooled cache of
+      fixed-size token blocks; a slot's sequence is scattered across the
+      pool and addressed through its block table (``core.paging``).
+    """
 
     k: jax.Array
     v: jax.Array
@@ -253,6 +262,32 @@ def as_index_vector(cache_index: jax.Array, batch: int) -> jax.Array:
     return idx
 
 
+def _gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, live: jax.Array,
+                cfg: ArchConfig, grouped: bool) -> jax.Array:
+    """Decode-step score/value contraction over a [B, S, kv, hd] view.
+
+    Shared by the dense and paged layouts: both reduce to the same masked
+    attention once the cache has been (gathered into) sequence-major form,
+    which is what keeps the two layouts bit-identical.
+    """
+    b_, one = q.shape[:2]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    n_rep = h // max(kv, 1)
+    if grouped:
+        # GQA-grouped contraction: the KV cache is used directly, never
+        # materialized at h heads (repeat_kv costs ~2x cache bytes/layer)
+        qg = q.reshape(b_, one, kv, n_rep, hd)
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+        s = s / math.sqrt(hd)
+        s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkrqs,bskd->bqkrd", pr.astype(v.dtype), v)
+        return o.reshape(b_, one, h * hd)
+    kf, vf = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    o = full_attention(q, kf, vf, causal=False, kv_len_mask=live)
+    return o.reshape(b_, one, h * hd)
+
+
 def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
                cache_index: jax.Array, *,
                window: int | None = None,
@@ -265,7 +300,6 @@ def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
     ``grouped``: GQA-grouped score contraction (no repeat_kv copy).
     """
     b_, one, _ = x.shape
-    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     idx_vec = as_index_vector(cache_index, b_)
     positions = idx_vec[:, None]
     q, k_new, v_new = gqa_qkv(x, p, cfg, positions)
@@ -279,21 +313,59 @@ def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
         live = (idx[None, :] <= slot[:, None]) | (idx_vec[:, None] >= s_max)
     else:
         live = idx[None, :] <= idx_vec[:, None]
-    n_rep = h // max(kv, 1)
-    if grouped:
-        # GQA-grouped contraction: the KV cache is used directly, never
-        # materialized at h heads (repeat_kv costs ~2x cache bytes/layer)
-        qg = q.reshape(b_, one, kv, n_rep, hd)
-        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
-        s = s / math.sqrt(hd)
-        s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
-        pr = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkrqs,bskd->bqkrd", pr.astype(v.dtype), v)
-        o = o.reshape(b_, one, h * hd)
+    o = _gqa_attend(q, k, v, live, cfg, grouped)
+    return apply_dense(o, p["wo"]), KVCache(k, v)
+
+
+def paged_write_slot(idx_vec: jax.Array, block_tables: jax.Array,
+                     block_size: int) -> tuple[jax.Array, jax.Array]:
+    """(physical block, in-block offset) for each slot's next cache write.
+
+    A slot whose index has run past the addressable range (cache full,
+    slot finished but not yet harvested) is routed to the null block, so
+    the fused decode step stays safe with zero host intervention.
+    """
+    b_ = idx_vec.shape[0]
+    t_max = block_tables.shape[1] * block_size
+    safe = jnp.minimum(idx_vec, t_max - 1)
+    blk = jnp.take_along_axis(block_tables, (safe // block_size)[:, None],
+                              axis=1)[:, 0]
+    blk = jnp.where(idx_vec < t_max, blk, NULL_BLOCK)
+    return blk, safe % block_size
+
+
+def gqa_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
+                     cache_index: jax.Array, block_tables: jax.Array, *,
+                     grouped: bool = False,
+                     impl: str = "gather") -> tuple[jax.Array, KVCache]:
+    """One-token decode against the pooled [NB, bs, kv, hd] cache.
+
+    ``block_tables``: [B, blocks_per_slot] int32 — logical block i of a
+    slot lives in pool row ``block_tables[slot, i]`` (0 = null block).
+    ``impl``: "gather" (XLA gather + the dense contraction, bit-identical
+    to the dense layout) or "pallas" (the fused paged-decode kernel).
+    """
+    b_, one, _ = x.shape
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    bs = cache.k.shape[1]
+    idx_vec = as_index_vector(cache_index, b_)
+    q, k_new, v_new = gqa_qkv(x, p, cfg, idx_vec[:, None])
+    blk, off = paged_write_slot(idx_vec, block_tables, bs)
+    k = cache.k.at[blk, off].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[blk, off].set(v_new[:, 0].astype(cache.v.dtype))
+    t_max = block_tables.shape[1] * bs
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_decode_attention
+        lengths = jnp.minimum(idx_vec + 1, t_max)
+        o = paged_decode_attention(
+            q[:, 0], k, v, block_tables, lengths,
+            interpret=jax.default_backend() != "tpu")
+        o = o.reshape(b_, one, cfg.num_heads * hd)
     else:
-        kf, vf = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
-        o = full_attention(q, kf, vf, causal=False, kv_len_mask=live)
-        o = o.reshape(b_, one, h * hd)
+        kg = k[block_tables].reshape(b_, t_max, kv, hd)
+        vg = v[block_tables].reshape(b_, t_max, kv, hd)
+        live = jnp.arange(t_max)[None, :] <= idx_vec[:, None]
+        o = _gqa_attend(q, kg, vg, live, cfg, grouped)
     return apply_dense(o, p["wo"]), KVCache(k, v)
 
 
@@ -363,6 +435,32 @@ def mla_attention(x: jax.Array, p: dict, cfg: ArchConfig, *,
     return apply_dense(o.reshape(b_, s, h * m.v_head_dim), p["wo"])
 
 
+def _mla_attend(x: jax.Array, p: dict, cfg: ArchConfig, q_nope: jax.Array,
+                q_rope: jax.Array, c_kv: jax.Array, k_rope: jax.Array,
+                live: jax.Array) -> jax.Array:
+    """Absorbed-matmul contraction over a sequence-major latent view
+    (c_kv [B, S, rank], k_rope [B, S, rope_dim]) — shared by both cache
+    layouts, which is what keeps dense and paged decode bit-identical."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, one = q_nope.shape[:2]
+    wk = p["k_up"]["kernel"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    # absorb k_up into the query: q_lat [B,1,h,kv_lora] (f32: one token only)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    s_lat = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) / math.sqrt(m.qk_head_dim)
+    scores = jnp.where(live, scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    # attend in latent space, then expand once per step via v_up
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", pr.astype(c_kv.dtype), c_kv)
+    wv = jnp.transpose(p["v_up"]["kernel"].reshape(m.kv_lora_rank, h, m.v_head_dim),
+                       (1, 0, 2)).astype(x.dtype)
+    o = jnp.einsum("bqhl,hld->bqhd", o_lat, wv)
+    return apply_dense(o.reshape(b_, one, h * m.v_head_dim), p["wo"])
+
+
 def mla_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
                cache_index: jax.Array) -> tuple[jax.Array, MLACache]:
     """Absorbed-matmul MLA decode: score and value contraction happen in the
@@ -379,21 +477,29 @@ def mla_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
         kr_new[:, 0].astype(cache.k_rope.dtype))
     s_max = c_kv.shape[1]
     live = (jnp.arange(s_max)[None] <= idx_vec[:, None])[:, None, None, :]
+    out = _mla_attend(x, p, cfg, q_nope, q_rope, c_kv, k_rope, live)
+    return out, MLACache(c_kv, k_rope)
 
-    wk = p["k_up"]["kernel"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
-    # absorb k_up into the query: q_lat [B,1,h,kv_lora] (f32: one token only)
-    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
-                       wk.astype(jnp.float32))
-    s_lat = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv.astype(jnp.float32))
-    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
-                        k_rope.astype(jnp.float32))
-    scores = (s_lat + s_rope) / math.sqrt(m.qk_head_dim)
-    scores = jnp.where(live, scores, NEG_INF)
-    pr = jax.nn.softmax(scores, axis=-1)
-    # attend in latent space, then expand once per step via v_up
-    o_lat = jnp.einsum("bhqk,bkl->bqhl", pr.astype(c_kv.dtype), c_kv)
-    wv = jnp.transpose(p["v_up"]["kernel"].reshape(m.kv_lora_rank, h, m.v_head_dim),
-                       (1, 0, 2)).astype(x.dtype)
-    o = jnp.einsum("bqhl,hld->bqhd", o_lat, wv)
-    out = apply_dense(o.reshape(b_, one, h * m.v_head_dim), p["wo"])
+
+def mla_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
+                     cache_index: jax.Array, block_tables: jax.Array
+                     ) -> tuple[jax.Array, MLACache]:
+    """MLA decode against pooled latent blocks ([NB, bs, rank] c_kv and
+    [NB, bs, rope_dim] k_rope addressed through the same block tables)."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, one, _ = x.shape
+    bs = cache.c_kv.shape[1]
+    idx_vec = as_index_vector(cache_index, b_)
+    positions = idx_vec[:, None]
+    q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
+    c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    blk, off = paged_write_slot(idx_vec, block_tables, bs)
+    c_kv = cache.c_kv.at[blk, off].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[blk, off].set(
+        kr_new[:, 0].astype(cache.k_rope.dtype))
+    t_max = block_tables.shape[1] * bs
+    ckv_g = c_kv[block_tables].reshape(b_, t_max, m.kv_lora_rank)
+    kr_g = k_rope[block_tables].reshape(b_, t_max, m.qk_rope_head_dim)
+    live = (jnp.arange(t_max)[None] <= idx_vec[:, None])[:, None, None, :]
+    out = _mla_attend(x, p, cfg, q_nope, q_rope, ckv_g, kr_g, live)
     return out, MLACache(c_kv, k_rope)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.paging import PagingConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import backend
@@ -70,6 +71,12 @@ class ModelOptions:
     # int8_matmul path).  Applied at trace time, so jitted callers bake
     # the choice into their compiled executable.
     matmul_backend: str = "xla"
+    # Paged decode attention: "gather" (XLA block-table gather + the dense
+    # contraction, bit-identical to the dense layout) or "pallas" (the
+    # fused paged-decode kernel with the gather folded into the
+    # flash-decode loop).  Only consulted when decode_step receives
+    # block tables.
+    paged_attn_impl: str = "gather"
 
 
 class Model:
@@ -447,9 +454,20 @@ class Model:
     # ------------------------------------------------------------------
     # Decode (one new token with per-family cache)
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False,
+                   paging: "PagingConfig | None" = None):
+        """Decode cache in either layout.
+
+        ``paging=None`` (dense): per-slot ``[batch, max_len, ...]`` rows —
+        the training/test layout.  With a ``core.paging.PagingConfig``,
+        returns the pooled block layout ``[num_blocks+1, block_size, ...]``
+        shared by all slots (row 0 is the null block); ``batch``/``max_len``
+        then only bound the serving engine's block tables, not the pool.
+        """
         cfg = self.cfg
         kd = jnp.bfloat16
+        if paging is not None:
+            return self._init_paged_cache(paging, kd, abstract)
 
         def kv(n_layers, s, n_kv, hd):
             shape = (n_layers, batch, s, n_kv, hd)
@@ -493,6 +511,27 @@ class Model:
                                 cfg.resolved_head_dim)}
         return kv(cfg.num_layers, max_len, cfg.num_kv_heads,
                   cfg.resolved_head_dim)
+
+    def _init_paged_cache(self, paging, kd, abstract: bool):
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"paged KV cache unsupported for family {cfg.family!r} "
+                "(SSM / rolling-window / enc-dec state is not paged)")
+
+        def mk(*shapes):
+            if abstract:
+                return [jax.ShapeDtypeStruct(s, kd) for s in shapes]
+            return [jnp.zeros(s, kd) for s in shapes]
+
+        pb, bs = paging.pool_blocks, paging.block_size
+        if cfg.mla is not None:
+            m = cfg.mla
+            return MLACache(*mk((cfg.num_layers, pb, bs, m.kv_lora_rank),
+                                (cfg.num_layers, pb, bs, m.qk_rope_head_dim)))
+        shape = (cfg.num_layers, pb, bs, cfg.num_kv_heads,
+                 cfg.resolved_head_dim)
+        return KVCache(*mk(shape, shape))
 
     @_with_backend
     def prefill(self, params: dict, batch: dict, max_len: int):
@@ -577,11 +616,19 @@ class Model:
 
     @_with_backend
     def decode_step(self, params: dict, cache, tokens: jax.Array,
-                    cache_index: jax.Array):
+                    cache_index: jax.Array,
+                    block_tables: jax.Array | None = None):
         """tokens: [B, 1] -> (logits [B, 1, vocab], new cache).
 
-        ``cache_index``: scalar, or [B] per-slot indices (serving)."""
+        ``cache_index``: scalar, or [B] per-slot indices (serving).
+        ``block_tables``: [B, blocks_per_slot] int32 selects the paged
+        cache layout (``cache`` must then be the pooled block layout from
+        ``init_cache(..., paging=...)``); None keeps the dense layout."""
         cfg = self.cfg
+        if block_tables is not None and cfg.family not in ("dense", "vlm",
+                                                           "moe"):
+            raise ValueError(
+                f"paged decode unsupported for family {cfg.family!r}")
         idx_vec = attn.as_index_vector(cache_index, tokens.shape[0])
         x = layers.embed(tokens, params["embed"], self.opt.compute_dtype)
         if cfg.positional == "learned":
@@ -599,7 +646,12 @@ class Model:
             def body(h, inp):
                 lp, c = inp
                 hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
-                o, c2 = attn.mla_decode(hn, lp["attn"], cfg, c, cache_index)
+                if block_tables is not None:
+                    o, c2 = attn.mla_decode_paged(hn, lp["attn"], cfg, c,
+                                                  cache_index, block_tables)
+                else:
+                    o, c2 = attn.mla_decode(hn, lp["attn"], cfg, c,
+                                            cache_index)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:
@@ -658,8 +710,15 @@ class Model:
             def body(h, inp):
                 lp, c = inp
                 hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
-                o, c2 = attn.gqa_decode(hn, lp["attn"], cfg, c, cache_index,
-                                        grouped=self.opt.grouped_gqa)
+                if block_tables is not None:
+                    o, c2 = attn.gqa_decode_paged(
+                        hn, lp["attn"], cfg, c, cache_index, block_tables,
+                        grouped=self.opt.grouped_gqa,
+                        impl=self.opt.paged_attn_impl)
+                else:
+                    o, c2 = attn.gqa_decode(hn, lp["attn"], cfg, c,
+                                            cache_index,
+                                            grouped=self.opt.grouped_gqa)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:

@@ -4,24 +4,36 @@ Compile-once discipline (the paper's Alg. 18 applied to serving):
 
 * ``prefill_fn``  — compiled per prompt-length *bucket* (powers of two up
   to max_len): a new request is padded up to its bucket, prefilled at
-  B=1, and its cache is scattered into a free slot of the shared batched
-  cache.  Buckets bound the number of compilations the way the paper's
-  maxima bound the fabric.
+  B=1, and its cache is scattered into the shared batched cache.
+  Buckets bound the number of compilations the way the paper's maxima
+  bound the fabric.
 * ``decode_fn``   — compiled exactly once, and *fused*: model decode,
-  sampling, per-slot index/budget/eos bookkeeping and the generated-token
-  scatter all run in a single jitted step.  Idle slots compute masked
-  garbage (idle PEs) that never reaches a live output.
+  per-slot sampling (temperature / top-k / top-p as device data, never
+  trace constants), per-slot index/budget/eos bookkeeping and the
+  generated-token scatter all run in a single jitted step.  Idle slots
+  compute masked garbage (idle PEs) that never reaches a live output.
 
 Host↔device discipline (the paper's "no host intervention beyond the
-topology registers"): **all** per-slot state — last sampled token, cache
-position, remaining budget, eos id, active/done flags, and the generated
-token ring — lives in device arrays (``SlotState``).  The host only
-*dispatches* the fused step and harvests finished requests with one bulk
-``device_get`` of the (done, count) vectors per sync — O(1) transfers
-per step regardless of ``max_batch``, versus the seed engine's
-O(max_batch) scalar round trips per decoded token.
-``run_to_completion(sync_every=k)`` stretches that further: k fused
-steps are dispatched back-to-back with no host read at all in between.
+topology registers"): **all** per-slot state lives in device arrays
+(``SlotState``).  The host only *dispatches* the fused step and harvests
+finished requests with one bulk ``device_get`` of the (done, count)
+vectors per sync — O(1) transfers per step regardless of ``max_batch``.
+Finished token buffers are pulled with one more bulk get, sliced to the
+longest finished stream (never ``max_len`` columns).
+
+Cache layouts (the paper's tiling discipline applied to KV memory):
+
+* ``cache_layout="dense"`` — per-slot ``[max_batch, max_len]`` rows; a
+  request of length 40 pays for ``max_len``, so concurrency is bounded
+  by the worst case.
+* ``cache_layout="paged"`` — a pooled ``[num_blocks, block_size, ...]``
+  cache (``core.paging``): a request is **admitted when the blocks for
+  its prompt are free**, blocks are appended as decode crosses block
+  boundaries (pre-reserved per sync window, so the fused step still
+  needs zero host intervention) and returned to the free list at
+  harvest.  When the pool runs dry mid-flight the most recently admitted
+  slot is preempted (its tokens are banked and the request re-queued for
+  recompute-resume), so the oldest request always completes.
 """
 from __future__ import annotations
 
@@ -32,9 +44,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
+                               PagingConfig, blocks_for_tokens)
 from repro.models import backend
 from repro.models.model import Model
-from repro.serving.sampling import SamplingParams, sample
+from repro.serving.sampling import SamplingParams, sample_per_slot
 
 
 @dataclasses.dataclass
@@ -43,9 +57,13 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int | None = None
+    sampling: SamplingParams | None = None   # None -> engine default
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     slot: int | None = None
+    # tokens generated before a preemption; on re-admission they extend
+    # the prompt (recompute-resume) and still count against the budget
+    prefix: list[int] = dataclasses.field(default_factory=list)
 
 
 class SlotState(NamedTuple):
@@ -58,6 +76,9 @@ class SlotState(NamedTuple):
     budget: jax.Array  # [B]    i32  max_new_tokens (incl. prefill token)
     count: jax.Array   # [B]    i32  tokens generated so far
     eos: jax.Array     # [B]    i32  eos id, -1 = none
+    temp: jax.Array    # [B]    f32  sampling temperature (0 = greedy)
+    top_k: jax.Array   # [B]    i32  top-k cutoff (0 = disabled)
+    top_p: jax.Array   # [B]    f32  nucleus threshold (1 = disabled)
     buf: jax.Array     # [B, max_len] i32 generated tokens
     rng: jax.Array     # PRNG key threaded through the fused step
 
@@ -76,10 +97,15 @@ class ServingEngine:
                  max_len: int = 512,
                  sampling: SamplingParams = SamplingParams(),
                  rng: jax.Array | None = None,
-                 matmul_backend: str | None = None):
+                 matmul_backend: str | None = None,
+                 cache_layout: str = "dense",
+                 block_size: int = 16,
+                 num_blocks: int | None = None):
         cfg = model.cfg
         if cfg.family == "encoder":
             raise ValueError("encoder-only archs have no decode step")
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout {cache_layout!r}")
         self.model = model
         self.cfg: ArchConfig = cfg
         self.max_batch = max_batch
@@ -98,6 +124,39 @@ class ServingEngine:
             self._traced_model = Model(model.cfg, dataclasses.replace(
                 model.opt, matmul_backend=self.matmul_backend))
 
+        # ---- cache layout -------------------------------------------------
+        if cache_layout == "paged":
+            if cfg.family not in ("dense", "vlm", "moe"):
+                raise ValueError("paged KV cache unsupported for family "
+                                 f"{cfg.family!r}")
+            if max_len % block_size or self.buckets[0] % block_size:
+                raise ValueError(
+                    f"block_size={block_size} must divide max_len={max_len} "
+                    f"and the smallest prefill bucket {self.buckets[0]}")
+            if num_blocks is None:   # worst-case pool == dense capacity
+                num_blocks = max_batch * (max_len // block_size)
+            self.paging: PagingConfig | None = PagingConfig(
+                block_size=block_size, num_blocks=num_blocks)
+            self.allocator = BlockAllocator(self.paging)
+            self.blocks_per_slot = max_len // block_size
+            self._tables = [[NULL_BLOCK] * self.blocks_per_slot
+                            for _ in range(max_batch)]
+            self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
+            self._tables_dirty = True
+            self.block_tables: jax.Array | None = jnp.zeros(
+                (max_batch, self.blocks_per_slot), jnp.int32)
+        else:
+            self.paging = None
+            self.allocator = None
+            self.block_tables = None
+        # host mirrors for block budgeting (exact at sync points; between
+        # syncs ``_idx_ub`` is a per-step upper bound on the device index)
+        self._plen = [0] * max_batch
+        self._budget = [0] * max_batch
+        self._idx_ub = [0] * max_batch
+        self._admit_seq = [0] * max_batch
+        self._seq = 0
+
         self.params: Any = None
         self.cache: Any = None
         self.state: SlotState = self._init_state(
@@ -105,13 +164,19 @@ class ServingEngine:
         self.slot_req: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self._uid = 0
-        # host↔device traffic accounting (asserted O(1)/step by the tests)
-        self.stats = {"decode_steps": 0, "device_gets": 0}
+        # host↔device traffic accounting (asserted O(1)/step by the tests);
+        # harvest_elems counts i32 elements pulled for finished buffers —
+        # bounded by the finished streams' lengths, not max_len
+        self.stats = {"decode_steps": 0, "device_gets": 0,
+                      "harvest_elems": 0, "preemptions": 0}
 
         self._decode = jax.jit(self._decode_impl)
-        self._prefill = {}   # bucket -> jitted fn
+        self._prefill = {}        # bucket -> jitted fn
         self._insert = jax.jit(self._insert_impl, static_argnums=(3,))
+        self._insert_paged = jax.jit(self._insert_paged_impl,
+                                     static_argnums=(3,))
         self._admit_slot = jax.jit(self._admit_slot_impl)
+        self._evict_slot = jax.jit(self._evict_slot_impl)
 
     # ------------------------------------------------------------------
     def _init_state(self, rng: jax.Array) -> SlotState:
@@ -124,23 +189,42 @@ class ServingEngine:
             budget=jnp.zeros((B,), jnp.int32),
             count=jnp.zeros((B,), jnp.int32),
             eos=jnp.full((B,), -1, jnp.int32),
+            temp=jnp.zeros((B,), jnp.float32),
+            top_k=jnp.zeros((B,), jnp.int32),
+            top_p=jnp.ones((B,), jnp.float32),
             buf=jnp.zeros((B, self.max_len), jnp.int32),
             rng=rng)
 
     def load(self, params) -> None:
         self.params = params
-        self.cache = self.model.init_cache(self.max_batch, self.max_len)
+        self.cache = self.model.init_cache(self.max_batch, self.max_len,
+                                           paging=self.paging)
 
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
-               eos_id: int | None = None) -> int:
+               eos_id: int | None = None,
+               sampling: SamplingParams | None = None) -> int:
+        # reject at the door: raising later, mid-drain, would abort
+        # run_to_completion with live requests still in flight.  The guard
+        # mirrors the decode finish condition (index >= max_len): every
+        # admitted request can use the full cache, so a max_len prompt is
+        # fine when its one token comes from the prefill sample.
         if len(prompt) > self.max_len:
-            # reject at the door: raising later, mid-drain, would abort
-            # run_to_completion with live requests still in flight
             raise ValueError(f"prompt length {len(prompt)} exceeds "
                              f"max_len={self.max_len}")
+        if len(prompt) == self.max_len and max_new_tokens > 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} leaves no cache position for "
+                f"decode (max_len={self.max_len}); max_new_tokens must be 1")
+        if self.paging is not None:
+            need = blocks_for_tokens(len(prompt), self.paging.block_size)
+            if need > self.paging.num_blocks:
+                # an unadmittable request would sit in the queue forever
+                raise ValueError(
+                    f"prompt needs {need} blocks but the pool has only "
+                    f"{self.paging.num_blocks}; increase num_blocks")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
-                                  eos_id))
+                                  eos_id, sampling))
         return self._uid
 
     # ------------------------------------------------------------------
@@ -149,8 +233,11 @@ class ServingEngine:
     def _prefill_impl(self, bucket: int, params, tokens, extras):
         with backend.use(self.matmul_backend):
             batch = {"tokens": tokens, **extras}
+            # paged: the B=1 cache is only a staging buffer for the block
+            # scatter, so bucket-sized is enough (and cheaper than max_len)
+            cache_len = bucket if self.paging is not None else self.max_len
             logits, cache = self._traced_model.prefill(params, batch,
-                                                       max_len=self.max_len)
+                                                       max_len=cache_len)
             return logits, cache
 
     def _insert_impl(self, global_cache, one_cache, slot, _bucket):
@@ -161,13 +248,32 @@ class ServingEngine:
             return g.at[slot].set(o[0])                # [B, ...] per-layer
         return jax.tree.map(put, global_cache, one_cache)
 
+    def _insert_paged_impl(self, pool, one_cache, table_row, bucket: int):
+        """Scatter a B=1 prefill cache into the block pool.
+
+        Chunks past the prompt's allocated blocks carry padding garbage;
+        their table entries are the null block, which absorbs them."""
+        bs = self.paging.block_size
+        nchunks = bucket // bs
+        ids = table_row[:nchunks]
+
+        def put(g, o):
+            chunks = o.reshape(o.shape[0], nchunks, bs, *o.shape[3:])
+            return g.at[:, ids].set(chunks)
+        return jax.tree.map(put, pool, one_cache)
+
     def _admit_slot_impl(self, state: SlotState, last_logits, slot, plen,
-                         budget, eos) -> SlotState:
+                         budget, eos, temp, top_k, top_p) -> SlotState:
         """Seat one prefilled request: sample its first token and reset
         every per-slot field — all on device, no host round trip."""
         rng, k = jax.random.split(state.rng)
-        first = sample(last_logits, k, self.sampling)[0]
-        fin = budget <= 1   # a 1-token budget is spent by the prefill sample
+        first = sample_per_slot(last_logits, k, temp[None], top_k[None],
+                                top_p[None])[0]
+        # spent: a 1-token budget is consumed by the prefill sample, an
+        # eos prefill sample ends the request, and a max_len prompt has
+        # no cache position left to decode into
+        fin = (budget <= 1) | ((eos >= 0) & (first == eos)) \
+            | (plen >= self.max_len)
         return SlotState(
             last=state.last.at[slot, 0].set(first),
             index=state.index.at[slot].set(plen),
@@ -176,18 +282,32 @@ class ServingEngine:
             budget=state.budget.at[slot].set(budget),
             count=state.count.at[slot].set(1),
             eos=state.eos.at[slot].set(eos),
+            temp=state.temp.at[slot].set(temp),
+            top_k=state.top_k.at[slot].set(top_k),
+            top_p=state.top_p.at[slot].set(top_p),
             buf=state.buf.at[slot].set(0).at[slot, 0].set(first),
             rng=rng)
 
-    def _decode_impl(self, params, cache, state: SlotState):
+    def _evict_slot_impl(self, state: SlotState, slot) -> SlotState:
+        """Preemption: park a slot as idle (its tokens were banked on the
+        host; the request re-enters through the normal admission path)."""
+        return state._replace(
+            active=state.active.at[slot].set(False),
+            done=state.done.at[slot].set(False),
+            count=state.count.at[slot].set(0),
+            index=state.index.at[slot].set(0))
+
+    def _decode_impl(self, params, cache, state: SlotState, block_tables):
         """The fused device step: decode -> sample -> scatter token ->
         advance indices/budgets -> raise done flags.  One dispatch, zero
         host syncs."""
         with backend.use(self.matmul_backend):
             rng, k = jax.random.split(state.rng)
             logits, cache = self._traced_model.decode_step(
-                params, cache, state.last, state.index)
-            toks = sample(logits[:, 0], k, self.sampling)
+                params, cache, state.last, state.index,
+                block_tables=block_tables)
+            toks = sample_per_slot(logits[:, 0], k, state.temp, state.top_k,
+                                   state.top_p)
 
             act = state.active
             act_i = act.astype(jnp.int32)
@@ -198,16 +318,16 @@ class ServingEngine:
             count = state.count + act_i
             index = state.index + act_i
             hit_eos = act & (state.eos >= 0) & (toks == state.eos)
+            # cache-full is index >= max_len: position max_len-1 is a real,
+            # usable slot (the historical `max_len - 1` check wasted it)
             finish = act & (hit_eos | (count >= state.budget)
-                            | (index >= self.max_len - 1))
-            state = SlotState(
+                            | (index >= self.max_len))
+            state = state._replace(
                 last=jnp.where(act[:, None], toks[:, None], state.last),
                 index=index,
                 active=act & ~finish,
                 done=state.done | finish,
-                budget=state.budget,
                 count=count,
-                eos=state.eos,
                 buf=buf,
                 rng=rng)
             return cache, state
@@ -219,55 +339,165 @@ class ServingEngine:
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            plen = len(req.prompt)
+            req = self.queue[0]
+            prompt = req.prompt + req.prefix
+            plen = len(prompt)
+            budget = req.max_new_tokens - len(req.prefix)
             bucket = next((b for b in self.buckets if b >= plen), None)
             if bucket is None:
                 raise ValueError(
                     f"prompt length {plen} exceeds max_len={self.max_len}")
+            blocks: list[int] | None = None
+            if self.paging is not None:
+                # block-budget admission: seat the request iff its prompt's
+                # blocks are free right now (FCFS — the queue head waits
+                # rather than being overtaken by shorter prompts)
+                blocks = self.allocator.alloc(blocks_for_tokens(
+                    plen, self.paging.block_size))
+                if blocks is None:
+                    break
+            self.queue.pop(0)
             if bucket not in self._prefill:
                 self._prefill[bucket] = jax.jit(
                     lambda p, t, e, _b=bucket: self._prefill_impl(_b, p, t, e))
-            toks = jnp.asarray(req.prompt + [0] * (bucket - plen),
-                               jnp.int32)[None]
+            toks = jnp.asarray(prompt + [0] * (bucket - plen), jnp.int32)[None]
             extras = {}
             if self.cfg.frontend is not None:
                 extras["frontend"] = jnp.zeros(
                     (1, self.cfg.frontend.num_tokens, self.cfg.d_model),
                     jnp.bfloat16)
             logits, one_cache = self._prefill[bucket](self.params, toks, extras)
-            self.cache = self._insert(self.cache, one_cache, slot, bucket)
+            if self.paging is not None:
+                self._slot_blocks[slot] = blocks
+                row = blocks + [NULL_BLOCK] * (self.blocks_per_slot
+                                               - len(blocks))
+                self._tables[slot] = row
+                self._tables_dirty = True
+                self.cache = self._insert_paged(
+                    self.cache, one_cache, jnp.asarray(row, jnp.int32), bucket)
+            else:
+                self.cache = self._insert(self.cache, one_cache, slot, bucket)
+            sp = req.sampling or self.sampling
+            temp, top_k, top_p = sp.as_arrays()
             self.state = self._admit_slot(
                 self.state, logits[:, plen - 1], jnp.int32(slot),
-                jnp.int32(plen), jnp.int32(req.max_new_tokens),
-                jnp.int32(-1 if req.eos_id is None else req.eos_id))
+                jnp.int32(plen), jnp.int32(budget),
+                jnp.int32(-1 if req.eos_id is None else req.eos_id),
+                temp, top_k, top_p)
             req.slot = slot
             self.slot_req[slot] = req
+            self._plen[slot] = plen
+            self._budget[slot] = budget
+            self._idx_ub[slot] = plen
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
 
     def _occupied(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    # -- paged block budgeting ----------------------------------------
+    def _slot_token_cap(self, slot: int) -> int:
+        """Most cache positions this slot can ever need (then it finishes)."""
+        return min(self._plen[slot] + self._budget[slot] - 1, self.max_len)
+
+    def _ensure_capacity(self, horizon: int) -> None:
+        """Pre-reserve blocks so the next ``horizon`` fused steps cannot
+        write outside a slot's blocks (the fused step itself never talks
+        to the allocator).  Oldest slots are served first; when the pool
+        runs dry the most recently admitted slot is preempted."""
+        if self.paging is None:
+            return
+        bs = self.paging.block_size
+        for slot in sorted(self._occupied(),
+                           key=lambda s: self._admit_seq[s]):
+            if self.slot_req[slot] is None:   # preempted by an earlier turn
+                continue
+            need_tokens = min(self._idx_ub[slot] + horizon,
+                              self._slot_token_cap(slot))
+            missing = blocks_for_tokens(need_tokens, bs) \
+                - len(self._slot_blocks[slot])
+            while missing > 0:
+                got = self.allocator.alloc(missing)
+                if got is not None:
+                    n_have = len(self._slot_blocks[slot])
+                    self._slot_blocks[slot] += got
+                    row = self._tables[slot]
+                    row[n_have:n_have + len(got)] = got
+                    self._tables_dirty = True
+                    break
+                victims = [s for s in self._occupied() if s != slot]
+                if not victims:
+                    raise RuntimeError(
+                        f"paged pool exhausted: {missing} more blocks needed "
+                        f"for slot {slot} with no other slot to preempt — "
+                        f"num_blocks={self.paging.num_blocks} cannot hold one "
+                        "full request; increase num_blocks")
+                self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        """Return a slot's blocks to the pool and null out its table row."""
+        self.allocator.free(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self._tables[slot] = [NULL_BLOCK] * self.blocks_per_slot
+        self._tables_dirty = True
+
+    def _preempt(self, slot: int) -> None:
+        """Recompute-preemption: bank the slot's generated tokens, free its
+        blocks, and push the request back to the queue head — it resumes
+        by prefilling prompt+banked tokens (greedy streams are unchanged;
+        the request keeps its uid and budget)."""
+        req = self.slot_req[slot]
+        cnt = int(jax.device_get(self.state.count[slot]))
+        self.stats["device_gets"] += 1
+        if cnt > 0:
+            toks = jax.device_get(self.state.buf[slot, :cnt])
+            self.stats["device_gets"] += 1
+            self.stats["harvest_elems"] += cnt
+            req.prefix = req.prefix + [int(t) for t in toks]
+        self.state = self._evict_slot(self.state, jnp.int32(slot))
+        self._release_slot_blocks(slot)
+        self.slot_req[slot] = None
+        req.slot = None
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+
     def _dispatch(self) -> None:
+        if self.paging is not None and self._tables_dirty:
+            self.block_tables = jnp.asarray(self._tables, jnp.int32)
+            self._tables_dirty = False
         self.cache, self.state = self._decode(self.params, self.cache,
-                                              self.state)
+                                              self.state, self.block_tables)
         self.stats["decode_steps"] += 1
+        for slot in self._occupied():
+            self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
+                                     self._slot_token_cap(slot))
 
     def _harvest(self) -> list[Request]:
         """One bulk device_get of the done/count vectors; token buffers are
-        pulled (one more bulk get) only for slots that actually finished."""
+        pulled (one more bulk get) only for slots that actually finished,
+        sliced to the longest finished stream — the transfer scales with
+        the tokens produced, not with max_len."""
         done_h, count_h = jax.device_get((self.state.done, self.state.count))
         self.stats["device_gets"] += 1
-        slots = [i for i in self._occupied() if done_h[i]]
+        occ = self._occupied()
+        slots = [i for i in occ if done_h[i]]
+        for i in occ:   # sync point: tighten the index upper bounds
+            self._idx_ub[i] = self._plen[i] + max(int(count_h[i]) - 1, 0)
         if not slots:
             return []
-        bufs = jax.device_get(self.state.buf[jnp.asarray(slots, jnp.int32)])
+        maxc = max(int(count_h[i]) for i in slots)
+        bufs = jax.device_get(
+            self.state.buf[jnp.asarray(slots, jnp.int32), :maxc])
         self.stats["device_gets"] += 1
+        self.stats["harvest_elems"] += len(slots) * maxc
         finished = []
         for row, i in zip(bufs, slots):
             req = self.slot_req[i]
-            req.generated = [int(t) for t in row[:count_h[i]]]
+            req.generated = req.prefix + [int(t) for t in row[:count_h[i]]]
             req.done = True
             self.slot_req[i] = None
+            if self.paging is not None:
+                self._release_slot_blocks(i)
             finished.append(req)
         return finished
 
@@ -277,22 +507,25 @@ class ServingEngine:
         self._admit()
         if not self._occupied():
             return []
+        self._ensure_capacity(1)
         self._dispatch()
         return self._harvest()
 
     def run_to_completion(self, max_steps: int = 10_000,
                           sync_every: int = 1) -> list[Request]:
         """Drain queue + slots.  ``sync_every=k`` dispatches k fused steps
-        back-to-back before each harvest sync (admission also happens at
-        sync points, so large k trades slot-refill latency for zero host
-        reads in steady state)."""
+        back-to-back before each harvest sync (admission and block
+        reservation also happen at sync points, so large k trades
+        slot-refill latency for zero host reads in steady state)."""
         done: list[Request] = []
         steps = 0
         while steps < max_steps:
             self._admit()
             if not self._occupied():
                 break
-            for _ in range(min(max(1, sync_every), max_steps - steps)):
+            window = min(max(1, sync_every), max_steps - steps)
+            self._ensure_capacity(window)
+            for _ in range(window):
                 self._dispatch()
                 steps += 1
             done += self._harvest()
@@ -303,3 +536,12 @@ class ServingEngine:
         """Compile-count accounting (the Alg. 18 amortization claim)."""
         return {"decode": self._decode._cache_size(),
                 "prefill_buckets": len(self._prefill)}
+
+    def memory_stats(self) -> FragmentationStats:
+        """Pool occupancy + fragmentation (paged layout only).  Exact at
+        sync points; between syncs resident tokens are an upper bound."""
+        if self.paging is None:
+            raise ValueError("memory_stats requires cache_layout='paged'")
+        self.allocator.set_used_tokens(
+            sum(self._idx_ub[i] for i in self._occupied()))
+        return self.allocator.stats()

@@ -1,4 +1,17 @@
-"""Token sampling: greedy / temperature / top-k / top-p."""
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+Two entry points:
+
+* ``sample``          — trace-time ``SamplingParams`` constants (training
+  eval, benchmarks, single-stream decode).  Uses ``lax.top_k`` and skips
+  disabled filters entirely, so the compiled step is minimal.
+* ``sample_per_slot`` — the serving path: temperature / top_k / top_p are
+  **[B] device arrays**, i.e. data rather than trace constants, so one
+  compiled fused decode step serves any per-request mixture (greedy rows
+  included) without retracing.  The price is a full-vocab sort per step
+  regardless of which filters are active — the compile-once discipline
+  applied to sampling.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -12,6 +25,11 @@ class SamplingParams:
     temperature: float = 0.0   # 0 -> greedy
     top_k: int = 0             # 0 -> disabled
     top_p: float = 1.0         # 1 -> disabled
+
+    def as_arrays(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Scalar device operands for the jit-safe per-slot path."""
+        return (jnp.float32(self.temperature), jnp.int32(self.top_k),
+                jnp.float32(self.top_p))
 
 
 def sample(logits: jax.Array, rng: jax.Array,
@@ -35,3 +53,35 @@ def sample(logits: jax.Array, rng: jax.Array,
                          keepdims=True)
         x = jnp.where(x < cutoff, -jnp.inf, x)
     return jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
+
+
+def sample_per_slot(logits: jax.Array, rng: jax.Array,
+                    temperature: jax.Array, top_k: jax.Array,
+                    top_p: jax.Array) -> jax.Array:
+    """logits [B, V]; temperature/top_p f32 [B], top_k i32 [B] -> [B] i32.
+
+    Rows with temperature <= 0 are greedy (bit-identical to ``sample``'s
+    greedy path); top_k == 0 and top_p == 1.0 disable those filters per
+    row.  Everything is data, nothing retraces.
+    """
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
+    sorted_x = jnp.sort(x, axis=-1)[:, ::-1]
+    # top-k: mask everything below the k-th largest (k == 0 -> keep all)
+    k_eff = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
+    kth = jnp.take_along_axis(sorted_x, (k_eff - 1)[:, None], axis=-1)
+    x = jnp.where(x < kth, -jnp.inf, x)
+    # top-p over the already-top-k-filtered distribution (same composition
+    # as the static path); filtered entries have prob 0 and never shrink
+    # the kept set, so top_p == 1.0 keeps everything.  Masking the sorted
+    # array keeps it sorted — no second full-vocab sort in the fused step.
+    sorted_f = jnp.where(sorted_x < kth, -jnp.inf, sorted_x)
+    probs = jax.nn.softmax(sorted_f, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = cum - probs < top_p[:, None]
+    cutoff = jnp.min(jnp.where(keep, sorted_f, jnp.inf), axis=-1,
+                     keepdims=True)
+    x = jnp.where(x < cutoff, -jnp.inf, x)
+    toks = jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, toks)

@@ -1,0 +1,323 @@
+"""Paged KV-cache subsystem: allocator, kernel, admission, preemption."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.paging import (NULL_BLOCK, BlockAllocator, PagingConfig,
+                               blocks_for_tokens)
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.models.model import Model, ModelOptions
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams, sample_per_slot
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(PagingConfig(block_size=16, num_blocks=8))
+    assert a.num_free == 8
+    got = a.alloc(3)
+    assert len(got) == 3 and a.num_free == 5
+    assert NULL_BLOCK not in got            # block 0 is never handed out
+    assert len(set(got)) == 3
+    a.free(got)
+    assert a.num_free == 8
+
+
+def test_allocator_oom_returns_none_without_side_effects():
+    a = BlockAllocator(PagingConfig(block_size=16, num_blocks=4))
+    first = a.alloc(3)
+    assert a.alloc(2) is None
+    assert a.num_free == 1                  # failed alloc took nothing
+    a.free(first)
+    assert a.alloc(4) is not None
+
+
+def test_allocator_lifo_reuse_and_double_free():
+    a = BlockAllocator(PagingConfig(block_size=16, num_blocks=4))
+    got = a.alloc(2)
+    a.free(got)
+    assert a.alloc(1)[0] == got[0]          # just-freed block comes back first
+    with pytest.raises(ValueError, match="double free"):
+        a.free([a.alloc(1)[0]] * 2)
+
+
+def test_fragmentation_stats():
+    a = BlockAllocator(PagingConfig(block_size=16, num_blocks=8))
+    a.alloc(4)
+    a.set_used_tokens(40)                   # 40 of 4*16=64 token capacity
+    s = a.stats()
+    assert s.used_blocks == 4 and s.free_blocks == 4
+    assert s.utilization == pytest.approx(0.5)
+    assert s.internal_fragmentation == pytest.approx(1 - 40 / 64)
+
+
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged-decode kernel (interpret mode) vs the dense contraction
+# ---------------------------------------------------------------------------
+def _reference(q, k_pool, v_pool, tables, lengths):
+    B, h, hd = q.shape
+    kv = k_pool.shape[2]
+    T = tables.shape[1] * k_pool.shape[1]
+    kg = k_pool[tables].reshape(B, T, kv, hd)
+    vg = v_pool[tables].reshape(B, T, kv, hd)
+    kf = jnp.repeat(kg, h // kv, axis=2)    # repeat_kv's head ordering
+    vf = jnp.repeat(vg, h // kv, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, kf) / math.sqrt(hd)
+    live = (jnp.arange(T)[None] < lengths[:, None])[:, None]
+    s = jnp.where(live, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vf)
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (8, 2)])
+def test_paged_kernel_matches_dense_path(h, kv):
+    rng = np.random.RandomState(0)
+    B, hd, bs, nblk = 3, 16, 8, 4
+    NB = 1 + B * nblk
+    q = jnp.asarray(rng.randn(B, h, hd), jnp.float32)
+    kp = jnp.asarray(rng.randn(NB, bs, kv, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(NB, bs, kv, hd), jnp.float32)
+    # scattered, non-contiguous physical blocks
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, NB)).reshape(B, nblk), jnp.int32)
+    lengths = jnp.asarray([5, 17, nblk * bs], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, tables, lengths, interpret=True)
+    ref = _reference(q, kp, vp, tables, lengths)
+    assert jnp.allclose(out, ref, atol=1e-5)
+
+
+def test_paged_kernel_ignores_null_block_entries():
+    """Table entries past the allocated blocks point at the null block;
+    masked columns must contribute exactly zero even if block 0 holds
+    garbage."""
+    rng = np.random.RandomState(1)
+    B, h, kv, hd, bs, nblk = 1, 4, 2, 16, 8, 4
+    NB = 1 + nblk
+    q = jnp.asarray(rng.randn(B, h, hd), jnp.float32)
+    kp = jnp.asarray(rng.randn(NB, bs, kv, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(NB, bs, kv, hd), jnp.float32)
+    kp = kp.at[NULL_BLOCK].set(1e4)         # poison the null block
+    vp = vp.at[NULL_BLOCK].set(1e4)
+    tables = jnp.asarray([[1, 2, NULL_BLOCK, NULL_BLOCK]], jnp.int32)
+    lengths = jnp.asarray([11], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, tables, lengths, interpret=True)
+    ref = _reference(q, kp, vp, tables, lengths)
+    assert jnp.allclose(out, ref, atol=1e-5)
+    assert bool(jnp.all(jnp.abs(out) < 1e3))
+
+
+# ---------------------------------------------------------------------------
+# Model-level cache-layout interface
+# ---------------------------------------------------------------------------
+def test_init_cache_pool_shapes():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    paging = PagingConfig(block_size=8, num_blocks=12)
+    cache = model.init_cache(4, 64, abstract=True, paging=paging)
+    assert cache.k.shape == (cfg.num_layers, 13, 8, cfg.num_kv_heads,
+                             cfg.resolved_head_dim)   # +1 null block row
+
+
+def test_init_cache_paged_rejects_ssm():
+    cfg = reduced_cfg("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="unsupported for family"):
+        Model(cfg).init_cache(2, 64, paging=PagingConfig(8, 8))
+
+
+def test_engine_rejects_paged_for_hybrid():
+    cfg = reduced_cfg("recurrentgemma-2b")
+    with pytest.raises(ValueError, match="unsupported for family"):
+        ServingEngine(Model(cfg), max_batch=2, max_len=64,
+                      cache_layout="paged")
+
+
+def test_engine_rejects_misaligned_block_size():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="must divide"):
+        ServingEngine(Model(cfg), max_batch=2, max_len=64,
+                      cache_layout="paged", block_size=24)
+
+
+# ---------------------------------------------------------------------------
+# Engine: block-budget admission, preemption, decode off-by-one
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _run(model, params, reqs, **engine_kw):
+    eng = ServingEngine(model, sampling=SamplingParams(), **engine_kw)
+    eng.load(params)
+    uids = [eng.submit(*r) for r in reqs]
+    done = {r.uid: r for r in eng.run_to_completion()}
+    return eng, [done[u] for u in uids]
+
+
+def test_preemption_resumes_bit_identical(qwen):
+    """A pool that cannot sustain two full requests must preempt the
+    younger one and still produce both greedy streams unchanged."""
+    model, params = qwen
+    reqs = [(list(range(1, 9)), 20), (list(range(9, 17)), 20)]
+    _, ref = _run(model, params, reqs, max_batch=2, max_len=64)
+    eng, got = _run(model, params, reqs, max_batch=2, max_len=64,
+                    cache_layout="paged", block_size=8, num_blocks=4)
+    assert eng.stats["preemptions"] > 0
+    assert [r.generated for r in got] == [r.generated for r in ref]
+
+
+def test_unadmittable_prompt_rejected_at_submit(qwen):
+    """A prompt needing more blocks than the whole pool must be rejected
+    at submit(), not left queued forever (step() would spin without
+    progress)."""
+    model, params = qwen
+    eng = ServingEngine(model, max_batch=2, max_len=64,
+                        sampling=SamplingParams(), cache_layout="paged",
+                        block_size=8, num_blocks=4)
+    eng.load(params)
+    with pytest.raises(ValueError, match="increase num_blocks"):
+        eng.submit(list(range(1, 41)), max_new_tokens=4)   # 5 blocks > 4
+    assert not eng.queue
+
+
+def test_pool_smaller_than_one_request_raises(qwen):
+    model, params = qwen
+    eng = ServingEngine(model, max_batch=2, max_len=64,
+                        sampling=SamplingParams(), cache_layout="paged",
+                        block_size=8, num_blocks=1)
+    eng.load(params)
+    eng.submit(list(range(1, 8)), max_new_tokens=30)
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        eng.run_to_completion()
+
+
+def test_decode_uses_final_cache_position(qwen):
+    """Regression for the decode off-by-one: with an unbounded budget a
+    prompt of length P must yield max_len - P + 1 tokens (the prefill
+    sample plus one per remaining cache position, *including* position
+    max_len - 1), in both layouts."""
+    model, params = qwen
+    for kw in ({}, {"cache_layout": "paged", "block_size": 8}):
+        eng, (req,) = _run(model, params, [([1, 2, 3], 100)],
+                           max_batch=2, max_len=32, **kw)
+        assert len(req.generated) == 32 - 3 + 1, kw
+
+
+def test_max_len_prompt_with_budget_one(qwen):
+    """A max_len-length prompt is admissible when its single token comes
+    from the prefill sample (the aligned submit guard)."""
+    model, params = qwen
+    eng, (req,) = _run(model, params, [(list(range(1, 33)), 1)],
+                       max_batch=2, max_len=32)
+    assert len(req.generated) == 1
+    with pytest.raises(ValueError, match="max_new_tokens must be 1"):
+        eng.submit(list(range(1, 33)), max_new_tokens=2)
+
+
+def test_fragmentation_accounting(qwen):
+    model, params = qwen
+    eng = ServingEngine(model, max_batch=4, max_len=64,
+                        sampling=SamplingParams(), cache_layout="paged",
+                        block_size=16, num_blocks=16)
+    eng.load(params)
+    eng.submit([1, 2, 3], max_new_tokens=8)      # mid-flight after one step
+    eng.step()
+    s = eng.memory_stats()
+    assert s.used_blocks >= 1
+    assert 0.0 < s.internal_fragmentation < 1.0
+    eng.run_to_completion()
+    assert eng.memory_stats().used_blocks == 0   # harvest returned blocks
+
+
+# ---------------------------------------------------------------------------
+# Admission edges — all must stay on the single decode trace
+# ---------------------------------------------------------------------------
+def test_admission_edges_one_decode_trace(qwen):
+    model, params = qwen
+    eng = ServingEngine(model, max_batch=4, max_len=64,
+                        sampling=SamplingParams(), cache_layout="paged",
+                        block_size=8)
+    eng.load(params)
+    u_bucket = eng.submit(list(range(1, 33)), max_new_tokens=4)  # len == bucket 32
+    u_budget1 = eng.submit([9, 8, 7], max_new_tokens=1)
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert len(done[u_bucket].generated) == 4
+    assert len(done[u_budget1].generated) == 1
+    # eos equal to the first prefill-sampled token must stop at one token
+    first = done[u_budget1].generated[0]
+    u_eos = eng.submit([9, 8, 7], max_new_tokens=50, eos_id=first)
+    done2 = {r.uid: r for r in eng.run_to_completion()}
+    assert done2[u_eos].generated == [first]
+    assert eng.compilations["decode"] == 1
+
+
+def test_per_request_sampling_no_retrace(qwen):
+    """Mixing greedy / top-k / top-p requests in one batch must not add
+    decode traces: the sampling knobs are device data, not constants."""
+    model, params = qwen
+    eng = ServingEngine(model, max_batch=4, max_len=64,
+                        sampling=SamplingParams())
+    eng.load(params)
+    u_greedy = eng.submit([1, 2, 3], max_new_tokens=5)
+    eng.submit([4, 5, 6], max_new_tokens=5,
+               sampling=SamplingParams(temperature=0.8, top_k=3))
+    eng.submit([7, 8, 9], max_new_tokens=5,
+               sampling=SamplingParams(temperature=1.2, top_p=0.5))
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert all(len(r.generated) == 5 for r in done.values())
+    assert eng.compilations["decode"] == 1
+    # the greedy stream must equal a greedy-only run (row isolation)
+    eng2 = ServingEngine(model, max_batch=4, max_len=64,
+                         sampling=SamplingParams())
+    eng2.load(params)
+    u2 = eng2.submit([1, 2, 3], max_new_tokens=5)
+    ref = {r.uid: r for r in eng2.run_to_completion()}
+    assert done[u_greedy].generated == ref[u2].generated
+
+
+def test_sample_per_slot_support():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 30.0],
+                          [10.0, 9.0, -10.0, -10.0],
+                          [1.0, 5.0, 2.0, 0.0]])
+    temp = jnp.asarray([1.0, 1.0, 0.0], jnp.float32)
+    top_k = jnp.asarray([2, 0, 0], jnp.int32)
+    top_p = jnp.asarray([1.0, 0.9, 1.0], jnp.float32)
+    for i in range(20):
+        t = sample_per_slot(logits, jax.random.PRNGKey(i), temp, top_k, top_p)
+        assert int(t[0]) in (2, 3)          # top-k row
+        assert int(t[1]) in (0, 1)          # top-p row
+        assert int(t[2]) == 1               # greedy row == argmax
+
+
+# ---------------------------------------------------------------------------
+# MLA paged layout
+# ---------------------------------------------------------------------------
+def test_mla_paged_matches_dense():
+    cfg = reduced_cfg("deepseek-v3-671b", lossless_moe=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    streams = {}
+    for layout in ("dense", "paged"):
+        eng = ServingEngine(model, max_batch=2, max_len=64,
+                            sampling=SamplingParams(), cache_layout=layout,
+                            block_size=8)
+        eng.load(params)
+        uid = eng.submit([5, 6, 7], max_new_tokens=5)
+        done = eng.run_to_completion()
+        streams[layout] = next(r for r in done if r.uid == uid).generated
+    assert streams["dense"] == streams["paged"]

@@ -124,6 +124,46 @@ def test_mixed_workload_bit_identical_to_per_slot_loop(engine):
         assert req.generated == want, req.uid
 
 
+def test_paged_mixed_workload_bit_identical(engine):
+    """The paged layout (block-budget admission, pooled cache, block-table
+    decode) must reproduce the dense engine's token streams bit-for-bit —
+    same requests, same seed, same greedy sampling — for every pool
+    geometry, including one with fewer blocks than the dense worst case."""
+    prompts = [[1, 2, 3], list(range(1, 9)), [4], list(range(2, 40, 3)),
+               [7, 7, 7, 7, 7], list(range(1, 20))]
+    want = {tuple(p): _per_slot_reference(engine.model, engine.params, p, 5)
+            for p in prompts}
+    for num_blocks in (None, 14):   # worst-case pool / undersized pool
+        eng = ServingEngine(engine.model, max_batch=4, max_len=64,
+                            sampling=SamplingParams(), cache_layout="paged",
+                            block_size=8, num_blocks=num_blocks)
+        eng.load(engine.params)
+        uids = {eng.submit(p, max_new_tokens=5): tuple(p) for p in prompts}
+        done = eng.run_to_completion()
+        assert len(done) == len(prompts)
+        for req in done:
+            assert req.generated == want[uids[req.uid]], (num_blocks, req.uid)
+        assert eng.compilations["decode"] == 1
+
+
+def test_paged_sync_every_matches_per_step_sync(engine):
+    """Deferred harvest with block pre-reservation across the window must
+    not change streams (blocks are reserved for the whole window up
+    front, so the fused steps never outrun the tables)."""
+    outs = {}
+    for k in (1, 4):
+        eng = ServingEngine(engine.model, max_batch=2, max_len=64,
+                            sampling=SamplingParams(), cache_layout="paged",
+                            block_size=8)
+        eng.load(engine.params)
+        uid_a = eng.submit([1, 2, 3], max_new_tokens=7)
+        uid_b = eng.submit([9, 8, 7, 6], max_new_tokens=5)
+        done = {r.uid: r.generated for r in
+                eng.run_to_completion(sync_every=k)}
+        outs[k] = (done[uid_a], done[uid_b])
+    assert outs[1] == outs[4]
+
+
 def test_compile_accounting_after_mixed_workload(engine):
     """The fused step must still compile exactly once across the whole
     mixed-length history of this module's engine."""
@@ -133,7 +173,9 @@ def test_compile_accounting_after_mixed_workload(engine):
 
 def test_o1_host_transfers_per_step():
     """Host<->device traffic per decode step must not scale with max_batch
-    (the seed engine did O(max_batch) scalar syncs per token)."""
+    (the seed engine did O(max_batch) scalar syncs per token), and the
+    finished-buffer pull must scale with the tokens produced, not with
+    the [mb, max_len] buffer allocation."""
     cfg = reduced_cfg("qwen1.5-0.5b")
     model = Model(cfg)
     gets_per_step = {}
@@ -148,6 +190,9 @@ def test_o1_host_transfers_per_step():
         # <= 1 bulk get per step + 1 per harvest event (amortized < 2)
         gets_per_step[mb] = eng.stats["device_gets"] / eng.stats["decode_steps"]
         assert gets_per_step[mb] <= 2.0
+        # buffers are sliced to max(count) columns before the device_get:
+        # mb requests x 6 tokens, never mb x max_len
+        assert eng.stats["harvest_elems"] <= mb * 6
     assert gets_per_step[8] <= gets_per_step[2] + 1e-9
 
 
