@@ -8,7 +8,6 @@ operating points — same model, no code change, different 'platform'.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs import get_config
 from repro.core.analytical import V5E

@@ -1,0 +1,147 @@
+"""Mixed-fleet serving vs per-model engines, at equal memory.
+
+One register-driven fabric (``serving.fabric``) serves two
+differently-shaped models from ONE compiled decode step; the baseline
+runs one single-topology engine per model *sequentially* (so at any
+instant both setups hold one maxima-shaped KV cache — equal memory).
+
+What the fabric buys:
+
+* **one compilation** — the sequential baseline traces a decode step per
+  model; the fleet engine traces once and reprograms registers.
+* **merged drain tails** — each per-model engine ends its run with
+  partially-empty batches; the mixed fleet back-fills those slots with
+  the other model's requests, so the same token work takes fewer fused
+  steps.
+* **bit-identical streams** — asserted per request: multi-topology
+  batching is a scheduling win, not an approximation.
+
+    PYTHONPATH=src python benchmarks/multi_topology.py
+    PYTHONPATH=src python benchmarks/multi_topology.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import REGISTRY, reduced
+from repro.core.spec import MemorySpec, RuntimeSpec, maxima_for
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+def _fleet_archs(max_len: int, layers: int | None):
+    a = reduced(REGISTRY["qwen1.5-0.5b"])
+    if layers is not None:
+        a = dataclasses.replace(a, num_layers=layers)
+    # a second, smaller topology on every adaptive axis (heads / layers /
+    # d_model / d_ff / vocab) sharing the structural template
+    b = dataclasses.replace(
+        a, name="half-width", d_model=48, num_heads=3, num_kv_heads=3,
+        d_ff=96, vocab_size=96, num_layers=max(1, a.num_layers - 1))
+    return a, b, maxima_for(a, b, seq_max=max_len)
+
+
+def _requests(n: int, vocab: int, max_len: int, max_new: int):
+    return [(list(range(1 + i % 7, 4 + i % 7 + i % (max_len // 8))),
+             2 + (i * 3) % max_new) for i in range(n)]
+
+
+def _engine(arch, maxima, max_batch, max_len):
+    spec = RuntimeSpec(arch=arch, maxima=maxima,
+                       memory=MemorySpec(max_batch=max_batch,
+                                         max_len=max_len))
+    return ServingEngine(spec, max_models=2, sampling=SamplingParams())
+
+
+def _drain(eng, submitted):
+    t0 = time.perf_counter()
+    done = eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    assert len(done) == len(submitted)
+    return ({submitted[r.uid]: r.generated for r in done}, toks, wall,
+            eng.stats["decode_steps"])
+
+
+def run(max_batch: int, max_len: int, n_per_model: int, max_new: int,
+        layers: int | None) -> dict:
+    cfg_a, cfg_b, maxima = _fleet_archs(max_len, layers)
+    params_a = Model(cfg_a).init(jax.random.PRNGKey(0))
+    params_b = Model(cfg_b).init(jax.random.PRNGKey(1))
+    reqs_a = _requests(n_per_model, cfg_a.vocab_size, max_len, max_new)
+    reqs_b = _requests(n_per_model, cfg_b.vocab_size, max_len, max_new)
+
+    # -- mixed fleet: one engine, one compiled step, interleaved models --
+    fleet = _engine(cfg_a, maxima, max_batch, max_len)
+    ids = {"a": fleet.add_model(params_a, cfg_a),
+           "b": fleet.add_model(params_b, cfg_b)}
+    sub = {}
+    for i in range(n_per_model):
+        for name, (p, budget) in (("a", reqs_a[i]), ("b", reqs_b[i])):
+            uid = fleet.submit(p, max_new_tokens=budget, model=ids[name])
+            sub[uid] = (name, i)
+    fleet_done, fleet_toks, fleet_wall, fleet_steps = _drain(fleet, sub)
+
+    # -- baseline: one single-topology engine per model, run sequentially
+    # (equal memory: one maxima-shaped cache live at a time) --------------
+    solo_done, solo_toks, solo_wall, solo_steps, compiles = {}, 0, 0.0, 0, 0
+    for name, cfg, params, reqs in (("a", cfg_a, params_a, reqs_a),
+                                    ("b", cfg_b, params_b, reqs_b)):
+        eng = _engine(cfg, maxima, max_batch, max_len)
+        mid = eng.add_model(params, cfg)
+        sub = {eng.submit(p, max_new_tokens=budget, model=mid): (name, i)
+               for i, (p, budget) in enumerate(reqs)}
+        done, toks, wall, steps = _drain(eng, sub)
+        solo_done.update(done)
+        solo_toks += toks
+        solo_wall += wall
+        solo_steps += steps
+        compiles += eng.compilations["decode"]
+
+    same = fleet_done == solo_done
+    print(f"fleet: {cfg_a.name} + {cfg_b.name} under shared maxima "
+          f"(d={maxima.d_model_max}, H={maxima.heads_max}, "
+          f"L={maxima.layers_enc_max}, V={maxima.vocab}); "
+          f"max_batch={max_batch}, {2 * n_per_model} requests")
+    print(f"  mixed fleet : {fleet_toks:4d} tokens  {fleet_steps:4d} fused "
+          f"steps  {fleet_wall:6.2f}s  "
+          f"({fleet_toks / max(fleet_wall, 1e-9):7.1f} tok/s)  "
+          f"decode compiles = {fleet.compilations['decode']}")
+    print(f"  2 engines   : {solo_toks:4d} tokens  {solo_steps:4d} fused "
+          f"steps  {solo_wall:6.2f}s  "
+          f"({solo_toks / max(solo_wall, 1e-9):7.1f} tok/s)  "
+          f"decode compiles = {compiles}")
+    print(f"  streams bit-identical: {same}   "
+          f"step reduction {solo_steps / max(fleet_steps, 1):.2f}x   "
+          f"throughput {solo_wall / max(fleet_wall, 1e-9):.2f}x")
+    assert same, "fleet streams diverged from single-topology engines"
+    assert fleet.compilations["decode"] == 1
+    assert fleet_steps <= solo_steps, (
+        f"mixed fleet took {fleet_steps} steps vs {solo_steps} sequential")
+    return {"fleet_steps": fleet_steps, "solo_steps": solo_steps,
+            "fleet_wall": fleet_wall, "solo_wall": solo_wall}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests-per-model", type=int, default=9)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 1 layer, tiny trace")
+    args = ap.parse_args()
+    if args.smoke:
+        args.layers, args.requests_per_model, args.max_new = 1, 5, 4
+    run(args.max_batch, args.max_len, args.requests_per_model, args.max_new,
+        args.layers)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import REGISTRY, reduced
+from repro.core.spec import MemorySpec, RuntimeSpec
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams
@@ -76,10 +77,10 @@ def run(arch: str, layers: int | None, max_len: int, budget_tokens: int,
     dense = drive(eng_d, reqs)
 
     num_blocks = budget_tokens // block_size  # same bytes, paged
-    eng_p = ServingEngine(model, max_batch=min(4 * dense_slots, n_requests),
-                          max_len=max_len, sampling=SamplingParams(),
-                          cache_layout="paged", block_size=block_size,
-                          num_blocks=num_blocks)
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(
+        cache_layout="paged", max_batch=min(4 * dense_slots, n_requests),
+        max_len=max_len, block_size=block_size, num_blocks=num_blocks))
+    eng_p = ServingEngine(spec, sampling=SamplingParams())
     eng_p.load(params)
     paged = drive(eng_p, reqs)
 

@@ -7,6 +7,7 @@
   fig8    — runtime heads-register sweep on one compiled engine
   fig11   — portability: tile re-planning across memory budgets
   fig12   — the 40-cell roofline table from the dry-run records
+  fleet   — multi-topology serving vs per-model engines (equal memory)
 """
 from __future__ import annotations
 
@@ -15,7 +16,17 @@ import time
 import traceback
 
 from benchmarks import (fig5_tilesize, fig8_heads, fig11_portability,
-                        fig12_roofline, table1_throughput, table2_analytical)
+                        fig12_roofline, multi_topology, table1_throughput,
+                        table2_analytical)
+
+
+def _fleet():
+    r = multi_topology.run(max_batch=4, max_len=64, n_per_model=5,
+                           max_new=4, layers=1)
+    yield "metric,fleet,two_engines"
+    yield f"fused_steps,{r['fleet_steps']},{r['solo_steps']}"
+    yield f"wall_s,{r['fleet_wall']:.2f},{r['solo_wall']:.2f}"
+
 
 SECTIONS = [
     ("table1", table1_throughput.run),
@@ -24,6 +35,7 @@ SECTIONS = [
     ("fig8", fig8_heads.run),
     ("fig11", fig11_portability.run),
     ("fig12", fig12_roofline.run),
+    ("fleet", _fleet),
 ]
 
 

@@ -9,7 +9,6 @@ One chip, forward pass, SL 64 — the paper's measurement point.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec

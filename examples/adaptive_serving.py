@@ -5,8 +5,14 @@ then the paper's three evaluation networks — a BERT variant, the shallow
 transformer (Table 1 net #1) and the custom encoder (Fig. 11 net) — run
 back-to-back by reprogramming the topology registers.  Zero retraces.
 
-The decode-side counterpart (one compiled step serving many *requests*
-with device-resident continuous batching) is ``continuous_batching.py``.
+Everything is driven through the one configuration surface: each network
+is an ``ArchConfig`` wrapped in a ``core.spec.RuntimeSpec``; the spec
+validates against the fabric's maxima (``fits_within`` — the
+re-synthesis boundary) and lowers to the register file (``registers()``).
+
+The decode-side counterparts: ``continuous_batching.py`` (one compiled
+step, many *requests*) and multi-topology serving (one compiled step,
+many *models*: ``python -m repro.launch.serve --fleet a,b``).
 
     PYTHONPATH=src python examples/adaptive_serving.py
 """
@@ -15,9 +21,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ArchConfig
 from repro.core import engine_ref
 from repro.core.adaptive import AdaptiveEngine, EngineOptions, pack
-from repro.core.registers import Maxima, make_registers
+from repro.core.registers import Maxima
+from repro.core.spec import MemorySpec, RuntimeSpec
 
 # 'synthesis-time' maxima: a quarter-scale BERT fabric (CPU-friendly demo;
 # set d_model_max=768 etc. for the real thing)
@@ -25,15 +33,27 @@ MAXIMA = Maxima(seq_max=64, heads_max=12, layers_enc_max=4, layers_dec_max=0,
                 d_model_max=192, d_ff_max=768, out_max=1000,
                 head_dim_max=16, vocab=1000)
 
-# the paper's three networks, scaled into the demo fabric
-TOPOLOGIES = {
-    "bert-variant": dict(seq=64, d_model=192, heads=12, d_ff=768,
-                         layers_enc=4, act="gelu"),
-    "shallow-transformer": dict(seq=64, d_model=128, heads=8, d_ff=512,
-                                layers_enc=2, act="relu"),
-    "custom-encoder": dict(seq=64, d_model=48, heads=3, d_ff=192,
-                           layers_enc=2, act="relu"),
-}
+SEQ = 64
+
+
+def _encoder(name: str, d_model: int, heads: int, d_ff: int, layers: int,
+             act: str) -> ArchConfig:
+    return ArchConfig(name=name, family="encoder", num_layers=layers,
+                      d_model=d_model, num_heads=heads, num_kv_heads=heads,
+                      d_ff=d_ff, vocab_size=1000, activation=act,
+                      norm="layernorm", positional="learned")
+
+
+# the paper's three networks, scaled into the demo fabric — each one a
+# RuntimeSpec sharing the fabric's maxima
+SPECS = [
+    RuntimeSpec(arch=_encoder("bert-variant", 192, 12, 768, 4, "gelu"),
+                maxima=MAXIMA, memory=MemorySpec(max_len=SEQ)),
+    RuntimeSpec(arch=_encoder("shallow-transformer", 128, 8, 512, 2, "relu"),
+                maxima=MAXIMA, memory=MemorySpec(max_len=SEQ)),
+    RuntimeSpec(arch=_encoder("custom-encoder", 48, 3, 192, 2, "relu"),
+                maxima=MAXIMA, memory=MemorySpec(max_len=SEQ)),
+]
 
 
 def main() -> None:
@@ -45,25 +65,25 @@ def main() -> None:
 
     tokens = jax.random.randint(jax.random.PRNGKey(0), (1, MAXIMA.seq_max),
                                 0, 1000)
-    for name, topo in TOPOLOGIES.items():
+    for seed, spec in enumerate(SPECS):
+        cfg = spec.arch
+        assert spec.fits_within(MAXIMA), spec.violations(MAXIMA)
         net = engine_ref.random_network(
-            jax.random.PRNGKey(hash(name) % 2**31), vocab=1000, out=1000,
-            **{k: v for k, v in topo.items() if k != "act"})
-        params = pack(engine, net)          # Alg. 2/5: load weights/biases
-        regs = make_registers(              # Alg. 18 step 3: write registers
-            sequence=topo["seq"], heads=topo["heads"],
-            layers_enc=topo["layers_enc"], layers_dec=0,
-            embeddings=topo["d_model"], hidden=topo["d_ff"], out=1000)
-        act = jnp.int32(1 if topo["act"] == "gelu" else 0)
+            jax.random.PRNGKey(hash(cfg.name) % 2**31), vocab=1000, out=1000,
+            seq=SEQ, d_model=cfg.d_model, heads=cfg.num_heads,
+            d_ff=cfg.d_ff, layers_enc=cfg.num_layers)
+        params = pack(engine, net)           # Alg. 2/5: load weights/biases
+        regs = spec.registers(sequence=SEQ)  # Alg. 18 step 3: the registers
+        act = jnp.int32(1 if cfg.activation == "gelu" else 0)
         t1 = time.perf_counter()
         out = step(params, regs, act, tokens)
         out.block_until_ready()
         dt = time.perf_counter() - t1
-        ref = engine_ref.forward(net, tokens[:, :topo["seq"]],
-                                 activation=topo["act"])
-        err = float(jnp.max(jnp.abs(out[:, :topo["seq"], :1000] - ref)))
-        print(f"  {name:22s} heads={topo['heads']:2d} d={topo['d_model']:4d} "
-              f"L={topo['layers_enc']}  {dt * 1e3:7.1f} ms  "
+        ref = engine_ref.forward(net, tokens[:, :SEQ],
+                                 activation=cfg.activation)
+        err = float(jnp.max(jnp.abs(out[:, :SEQ, :1000] - ref)))
+        print(f"  {cfg.name:22s} heads={cfg.num_heads:2d} "
+              f"d={cfg.d_model:4d} L={cfg.num_layers}  {dt * 1e3:7.1f} ms  "
               f"max|err vs dedicated net| = {err:.2e}")
 
     print(f"total wall {time.perf_counter() - t0:.1f}s; "

@@ -16,6 +16,7 @@ import time
 import jax
 
 from repro.configs import REGISTRY, reduced
+from repro.core.spec import MemorySpec, RuntimeSpec
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams
@@ -27,9 +28,10 @@ def main() -> None:
     # a pool of 48 x 16-token blocks = 768 cache tokens: the dense layout
     # would fit only 6 worst-case rows of 128 in the same bytes, yet 12
     # slots can be live at once when requests are short
-    eng = ServingEngine(model, max_batch=12, max_len=128,
-                        sampling=SamplingParams(),
-                        cache_layout="paged", block_size=16, num_blocks=48)
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(
+        cache_layout="paged", max_batch=12, max_len=128,
+        block_size=16, num_blocks=48))
+    eng = ServingEngine(spec, sampling=SamplingParams())
     eng.load(model.init(jax.random.PRNGKey(0)))
 
     rng = jax.random.PRNGKey(1)

@@ -9,7 +9,7 @@ one of these configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax.numpy as jnp
@@ -118,6 +118,31 @@ class ArchConfig:
     frontend: FrontendConfig | None = None
     # Multi-token prediction depth (DeepSeek-V3 MTP); 0 disables.
     num_mtp_modules: int = 0
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    def validate(self) -> "ArchConfig":
+        """Construction-time shape sanity: the mistakes rejected here used
+        to surface as cryptic reshape errors deep inside jit."""
+        if self.num_heads > 0:
+            # the paper's own encoder networks use deliberately odd dims
+            # (custom-encoder: 200/3) and define head_dim = floor(d/h); the
+            # decode families have no such convention, so reject there
+            if self.head_dim == 0 and self.mla is None \
+                    and self.family != "encoder" \
+                    and self.d_model % self.num_heads:
+                raise ValueError(
+                    f"{self.name}: d_model={self.d_model} is not divisible "
+                    f"by num_heads={self.num_heads} (and no explicit "
+                    "head_dim is set); pick a head count that divides "
+                    "d_model or set head_dim explicitly")
+            if self.num_kv_heads <= 0 or self.num_heads % self.num_kv_heads:
+                raise ValueError(
+                    f"{self.name}: num_kv_heads={self.num_kv_heads} must be "
+                    f"a positive divisor of num_heads={self.num_heads} "
+                    "(each KV head serves an equal group of query heads)")
+        return self
 
     # ---- derived ----------------------------------------------------------
     @property

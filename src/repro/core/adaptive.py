@@ -22,7 +22,6 @@ maps any head count onto the fixed PE array.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable
 
 import jax
@@ -49,6 +48,27 @@ class AdaptiveEngine:
         self.opt = options or EngineOptions()
         self._compiled: Callable | None = None
         self._jitted = None
+
+    @classmethod
+    def from_spec(cls, spec, *, batch: int = 1,
+                  pooled_output: bool = False) -> "AdaptiveEngine":
+        """Synthesize the fabric a ``core.spec.RuntimeSpec`` describes:
+        maxima from ``spec.maxima`` (required — that IS the fabric),
+        dtype from ``spec.execution``, decoder stack provisioned when the
+        arch has one.  Topologies are then selected per call with
+        ``spec.registers(...)`` — the one configuration surface."""
+        if spec.maxima is None:
+            raise ValueError(
+                "AdaptiveEngine.from_spec needs spec.maxima — the fabric "
+                "is synthesized at the maxima, not at one topology "
+                "(build them with core.spec.maxima_for)")
+        # a constructed RuntimeSpec already fits its own maxima (validated
+        # in __post_init__), so no re-check here
+        opts = EngineOptions(
+            batch=batch, dtype=spec.execution.param_dtype,
+            decoder=spec.maxima.layers_dec_max > 0,
+            pooled_output=pooled_output)
+        return cls(spec.maxima, opts)
 
     # ------------------------------------------------------------------
     # Parameter structure (synthesis-time buffers)

@@ -72,3 +72,42 @@ def mask_lanes(x: jax.Array, live, axis: int = -1) -> jax.Array:
     shape = [1] * x.ndim
     shape[axis] = size
     return x * m.reshape(shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot (batched) variants — multi-topology serving.  Every slot of a
+# batch may run a *different* topology, so the live extent is a [B] vector
+# rather than one scalar register.
+# ---------------------------------------------------------------------------
+def slot_mask(max_dim: int, live: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """[B, max_dim] mask: row b is 1.0 for lanes < live[b]."""
+    return (jnp.arange(max_dim)[None, :] < live[:, None]).astype(dtype)
+
+
+def masked_rmsnorm_slots(x: jax.Array, gamma: jax.Array,
+                         d_live: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm of ``x [B, S, D]`` over each slot's first ``d_live[b]``
+    lanes; ``gamma`` is per-slot ``[B, D]`` (gathered from a model table)."""
+    m = slot_mask(x.shape[-1], d_live)[:, None, :]
+    n = jnp.maximum(d_live, 1).astype(jnp.float32)[:, None, None]
+    x32 = x.astype(jnp.float32) * m
+    var = jnp.sum(jnp.square(x32), axis=-1, keepdims=True) / n
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)[:, None, :] * m).astype(x.dtype)
+
+
+def masked_layernorm_slots(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                           d_live: jax.Array,
+                           eps: float = 1e-5) -> jax.Array:
+    """LayerNorm of ``x [B, S, D]`` with per-slot live width and per-slot
+    ``[B, D]`` scale/bias."""
+    m = slot_mask(x.shape[-1], d_live)[:, None, :]
+    n = jnp.maximum(d_live, 1).astype(jnp.float32)[:, None, None]
+    x32 = x.astype(jnp.float32) * m
+    mu = jnp.sum(x32, axis=-1, keepdims=True) / n
+    cent = (x32 - mu) * m
+    var = jnp.sum(jnp.square(cent), axis=-1, keepdims=True) / n
+    y = cent * jax.lax.rsqrt(var + eps)
+    out = y * gamma.astype(jnp.float32)[:, None, :] \
+        + beta.astype(jnp.float32)[:, None, :]
+    return (out * m).astype(x.dtype)

@@ -1,0 +1,245 @@
+"""The one adaptive configuration surface: ``RuntimeSpec``.
+
+ADAPTOR's runtime contract has exactly three kinds of knobs, and the
+paper keeps them strictly separated (§3.12):
+
+* **synthesis-time maxima** — frozen into the fabric; changing them costs
+  a ~36 h re-synthesis (here: a recompile).  ``Maxima``.
+* **topology registers**    — rewritten per network over AXI-Lite with
+  zero re-synthesis.  ``TopologyRegisters``.
+* **execution discipline**  — which compute units / dtypes the fabric
+  was built with.
+
+Before this module the repo scattered those knobs over four surfaces
+(``ModelOptions``, ``ServingEngine`` kwargs, ``EngineOptions``,
+``PagingConfig``) with duplicated fields.  ``RuntimeSpec`` is the single
+frozen source of truth:
+
+    spec = RuntimeSpec(arch=cfg, maxima=mx,
+                       execution=ExecutionSpec(matmul_backend="pallas"),
+                       memory=MemorySpec(cache_layout="paged"))
+    spec.registers(sequence=64)     # lowering to the register file
+    spec.fits_within(mx)            # the re-synthesis boundary check
+
+Validation happens at *construction* time with actionable messages —
+the divisibility and pool-geometry mistakes that used to surface as
+cryptic shape errors deep inside jit are rejected here instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.paging import PagingConfig, blocks_for_tokens
+from repro.core.registers import Maxima, TopologyRegisters, registers_for
+
+_MATMUL_BACKENDS = ("xla", "pallas")
+_PAGED_ATTN_IMPLS = ("gather", "pallas")
+_CACHE_LAYOUTS = ("dense", "paged")
+_QUANT_MODES = ("none", "int8")
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """How the fabric computes: kernel routing, dtypes, quantization.
+
+    These are trace-time choices — changing any of them recompiles, so
+    they live beside the maxima, not beside the registers.
+    """
+
+    matmul_backend: str = "xla"      # "xla" | "pallas" (ADAPTOR tiled kernels)
+    paged_attn_impl: str = "gather"  # "gather" | "pallas" (fused flash-decode)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    quant: str = "none"              # "none" | "int8" (C6 serving weights)
+    grouped_gqa: bool = False        # GQA-grouped decode contraction
+
+    def __post_init__(self) -> None:
+        if self.matmul_backend not in _MATMUL_BACKENDS:
+            raise ValueError(
+                f"ExecutionSpec.matmul_backend={self.matmul_backend!r} is not "
+                f"one of {_MATMUL_BACKENDS}")
+        if self.paged_attn_impl not in _PAGED_ATTN_IMPLS:
+            raise ValueError(
+                f"ExecutionSpec.paged_attn_impl={self.paged_attn_impl!r} is "
+                f"not one of {_PAGED_ATTN_IMPLS}")
+        if self.quant not in _QUANT_MODES:
+            raise ValueError(
+                f"ExecutionSpec.quant={self.quant!r} is not one of "
+                f"{_QUANT_MODES}")
+
+
+@dataclass(frozen=True)
+class MemorySpec:
+    """How decode-time memory is provisioned: cache layout + pool geometry.
+
+    ``num_blocks=None`` sizes the paged pool at the dense worst case
+    (``max_batch * max_len / block_size``), which makes ``paged`` a pure
+    fragmentation win with identical capacity.
+    """
+
+    cache_layout: str = "dense"      # "dense" | "paged"
+    max_batch: int = 8
+    max_len: int = 512
+    block_size: int = 16
+    num_blocks: int | None = None    # None -> dense worst case
+
+    def __post_init__(self) -> None:
+        if self.cache_layout not in _CACHE_LAYOUTS:
+            raise ValueError(
+                f"MemorySpec.cache_layout={self.cache_layout!r} is not one "
+                f"of {_CACHE_LAYOUTS}")
+        if self.max_batch <= 0 or self.max_len <= 0:
+            raise ValueError(
+                f"MemorySpec needs positive max_batch/max_len, got "
+                f"max_batch={self.max_batch} max_len={self.max_len}")
+        if self.cache_layout == "paged":
+            if self.block_size <= 0:
+                raise ValueError(
+                    f"MemorySpec.block_size must be positive, got "
+                    f"{self.block_size}")
+            if self.max_len % self.block_size:
+                raise ValueError(
+                    f"MemorySpec.block_size={self.block_size} must divide "
+                    f"max_len={self.max_len} (the block tables address whole "
+                    "blocks)")
+            need = blocks_for_tokens(self.max_len, self.block_size)
+            if self.num_blocks is not None and self.num_blocks < need:
+                raise ValueError(
+                    f"paged pool of {self.num_blocks} x {self.block_size}-"
+                    f"token blocks holds {self.num_blocks * self.block_size} "
+                    f"tokens < max_len={self.max_len}: one full-length "
+                    f"request could never be admitted; use num_blocks >= "
+                    f"{need} (or shrink max_len)")
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return self.max_batch * (self.max_len // self.block_size)
+
+    def paging(self) -> PagingConfig | None:
+        """Lower to the pool geometry (None for the dense layout)."""
+        if self.cache_layout != "paged":
+            return None
+        return PagingConfig(block_size=self.block_size,
+                            num_blocks=self.resolved_num_blocks)
+
+
+@dataclass(frozen=True)
+class RuntimeSpec:
+    """One frozen description of a runnable configuration.
+
+    ``arch`` is *what* runs, ``maxima`` is the fabric it must fit (None =
+    a dedicated fabric exactly ``arch``-sized), ``execution`` is how it
+    computes, ``memory`` is how its decode state is laid out.
+    """
+
+    arch: ArchConfig
+    maxima: Maxima | None = None
+    execution: ExecutionSpec = field(default_factory=ExecutionSpec)
+    memory: MemorySpec = field(default_factory=MemorySpec)
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    # ------------------------------------------------------------------
+    # Validation (construction-time, actionable messages)
+    # ------------------------------------------------------------------
+    def validate(self) -> "RuntimeSpec":
+        cfg = self.arch
+        cfg.validate()
+        if self.memory.cache_layout == "paged" and \
+                cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"cache_layout='paged' is unsupported for family "
+                f"{cfg.family!r} (SSM / rolling-window / enc-dec decode "
+                "state is not paged); use cache_layout='dense'")
+        if self.maxima is not None:
+            bad = self.violations(self.maxima)
+            if bad:
+                hint = ""
+                if any(v.startswith("sequence=") for v in bad):
+                    hint = (" (the spec's sequence bound is memory.max_len "
+                            "— set memory=MemorySpec(max_len=...) to the "
+                            "intended sequence length)")
+                raise ValueError(
+                    "spec does not fit its own maxima (re-synthesis "
+                    "required): " + "; ".join(bad) + hint)
+        return self
+
+    # ------------------------------------------------------------------
+    # Lowerings
+    # ------------------------------------------------------------------
+    def registers(self, sequence: int,
+                  layers_dec: int | None = None) -> TopologyRegisters:
+        """Lower to the §3.12 register file (identical to
+        ``registers_for(self.arch, ...)`` — one lowering, two spellings)."""
+        return registers_for(self.arch, sequence, layers_dec)
+
+    def static_registers(self, sequence: int | None = None) -> dict[str, int]:
+        """The register values as plain ints (for ceiling checks)."""
+        cfg = self.arch
+        return {
+            "sequence": self.memory.max_len if sequence is None else sequence,
+            "heads": cfg.num_heads,
+            "layers_enc": (cfg.encdec.num_encoder_layers if cfg.encdec
+                           else cfg.num_layers),
+            "layers_dec": cfg.num_layers if cfg.encdec else 0,
+            "embeddings": cfg.d_model,
+            "hidden": cfg.d_ff,
+            "out": cfg.vocab_size,
+        }
+
+    # ------------------------------------------------------------------
+    # The re-synthesis boundary
+    # ------------------------------------------------------------------
+    def violations(self, maxima: Maxima) -> list[str]:
+        """Every way this spec exceeds ``maxima`` (empty = fits)."""
+        regs = self.static_registers()
+        lim = {"sequence": maxima.seq_max, "heads": maxima.heads_max,
+               "layers_enc": maxima.layers_enc_max,
+               "layers_dec": maxima.layers_dec_max,
+               "embeddings": maxima.d_model_max, "hidden": maxima.d_ff_max,
+               "out": maxima.out_max}
+        out = [f"{k}={regs[k]} > {lim[k]}" for k in lim if regs[k] > lim[k]]
+        if self.arch.resolved_head_dim > maxima.head_dim_max:
+            out.append(f"head_dim={self.arch.resolved_head_dim} > "
+                       f"{maxima.head_dim_max}")
+        if self.arch.vocab_size > maxima.vocab:
+            out.append(f"vocab={self.arch.vocab_size} > {maxima.vocab}")
+        return out
+
+    def fits_within(self, maxima: Maxima) -> bool:
+        """True iff every live dimension fits the synthesized fabric —
+        exact equality is a fit (the maxima topology itself runs)."""
+        return not self.violations(maxima)
+
+
+# ---------------------------------------------------------------------------
+# Fleet maxima
+# ---------------------------------------------------------------------------
+def maxima_for(*archs: ArchConfig, seq_max: int,
+               layers_dec_max: int | None = None) -> Maxima:
+    """The smallest fabric covering every arch — elementwise maxima, the
+    'synthesis planning' step of multi-topology serving."""
+    if not archs:
+        raise ValueError("maxima_for needs at least one ArchConfig")
+    enc = [a.encdec.num_encoder_layers if a.encdec else a.num_layers
+           for a in archs]
+    dec = [a.num_layers if a.encdec else 0 for a in archs]
+    return Maxima(
+        seq_max=seq_max,
+        heads_max=max(a.num_heads for a in archs),
+        layers_enc_max=max(enc),
+        layers_dec_max=(layers_dec_max if layers_dec_max is not None
+                        else max(dec)),
+        d_model_max=max(a.d_model for a in archs),
+        d_ff_max=max(a.d_ff for a in archs),
+        out_max=max(a.vocab_size for a in archs),
+        head_dim_max=max(a.resolved_head_dim for a in archs),
+        vocab=max(a.vocab_size for a in archs),
+    )

@@ -12,7 +12,6 @@ sweeps it the way the paper sweeps Fig. 5/9/13.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 
 from repro.core.analytical import TPUSpec, V5E

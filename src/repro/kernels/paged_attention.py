@@ -32,9 +32,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _paged_kernel(scale: float, bs: int, bt_ref, len_ref,
-                  q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s):
+def _paged_kernel(scale: float, bs: int, masked_heads: bool, *refs):
+    if masked_heads:
+        bt_ref, len_ref, live_ref, q_ref, k_ref, v_ref, o_ref, \
+            acc, m_s, l_s = refs
+    else:
+        bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s = refs
+        live_ref = None
     b = pl.program_id(0)
+    g = pl.program_id(1)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -67,13 +73,20 @@ def _paged_kernel(scale: float, bs: int, bt_ref, len_ref,
     @pl.when(j == pl.num_programs(2) - 1)
     def _flush():
         l = jnp.maximum(l_s[...], 1e-30)
-        o_ref[0, 0] = (acc[...] / l).astype(o_ref.dtype)
+        out = acc[...] / l
+        if live_ref is not None:
+            # multi-topology serving: KV-head groups >= this sequence's
+            # live head count are padded fabric lanes — their q/k/v may
+            # hold garbage, so force the idle-PE contract (exact zeros)
+            out = jnp.where(g < live_ref[b], out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,
+                           live_kv: jax.Array | None = None,
                            scale: float | None = None,
                            interpret: bool = False) -> jax.Array:
     """One-token decode attention over the pooled KV cache.
@@ -82,6 +95,10 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     k/v_pool:     [NB, bs, kv, hd]  the shared block pool (row 0 = null)
     block_tables: [B, nblk] int32   physical block of each logical block
     lengths:      [B] int32         live positions per sequence (index+1)
+    live_kv:      [B] int32 or None live KV-head groups per sequence —
+                  multi-topology serving pads the head axis to the fabric
+                  maxima, and groups past a slot's live count are masked
+                  to exact zeros (idle PE lanes)
     -> [B, h, hd]
 
     Softmax statistics accumulate in f32 VMEM scratch; numerics match
@@ -106,28 +123,35 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     vp = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, hdp - hd))) \
         .swapaxes(1, 2)
 
+    masked_heads = live_kv is not None
+    # index maps take one trailing arg per scalar-prefetch operand
+    if masked_heads:
+        q_map = lambda b, g, j, bt, ln, lv: (b, g, 0, 0)
+        kv_map = lambda b, g, j, bt, ln, lv: (bt[b, j], g, 0, 0)
+        prefetch = (block_tables, lengths, live_kv)
+    else:
+        q_map = lambda b, g, j, bt, ln: (b, g, 0, 0)
+        kv_map = lambda b, g, j, bt, ln: (bt[b, j], g, 0, 0)
+        prefetch = (block_tables, lengths)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,     # block_tables, lengths
+        num_scalar_prefetch=len(prefetch),
         grid=(B, kv, nblk),
         in_specs=[
-            pl.BlockSpec((1, 1, R, hdp), lambda b, g, j, bt, ln: (b, g, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hdp),
-                         lambda b, g, j, bt, ln: (bt[b, j], g, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hdp),
-                         lambda b, g, j, bt, ln: (bt[b, j], g, 0, 0)),
+            pl.BlockSpec((1, 1, R, hdp), q_map),
+            pl.BlockSpec((1, 1, bs, hdp), kv_map),
+            pl.BlockSpec((1, 1, bs, hdp), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, R, hdp),
-                               lambda b, g, j, bt, ln: (b, g, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, R, hdp), q_map),
         scratch_shapes=[pltpu.VMEM((R, hdp), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_kernel, scale, bs),
+        functools.partial(_paged_kernel, scale, bs, masked_heads),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, kv, R, hdp), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, qg, kp, vp)
+    )(*prefetch, qg, kp, vp)
     return out[:, :, :n_rep, :hd].reshape(B, h, hd)
 
 

@@ -72,8 +72,6 @@ def collective_bytes(hlo_text: str) -> dict[str, float]:
     """
     totals: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
     counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
-    op_re = re.compile(r"^\s*(" + "|".join(_COLLECTIVES)
-                       + r")(-start)?\(")
     for line in hlo_text.splitlines():
         stripped = line.strip()
         if " = " not in stripped:

@@ -1,7 +1,14 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the slot-based serving engine on a reduced config, submits a
-demo request mix, and reports tokens/s + the compile-once accounting.
+Builds one ``core.spec.RuntimeSpec`` from the CLI flags (the single
+configuration surface), spins up the serving engine on a reduced config,
+submits a demo request mix, and reports tokens/s + the compile-once
+accounting.
+
+Multi-topology mode: ``--fleet qwen1.5-0.5b,codeqwen1.5-7b`` serves
+several architectures from ONE compiled decode step — shared maxima are
+planned with ``maxima_for``, each model is packed into the fabric's
+weight table, and requests carry a model id.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ import time
 import jax
 
 from repro.configs import REGISTRY, reduced
+from repro.core.spec import ExecutionSpec, MemorySpec, RuntimeSpec, maxima_for
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams
@@ -19,6 +27,9 @@ from repro.serving.sampling import SamplingParams
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--fleet", default=None,
+                    help="comma-separated arch ids served multi-topology "
+                         "from one compiled step (overrides --arch)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -28,6 +39,8 @@ def main() -> None:
                     help="fused decode steps dispatched between host syncs")
     ap.add_argument("--kernels", choices=("xla", "pallas"), default="xla",
                     help="matmul routing for prefill/decode")
+    ap.add_argument("--quant", choices=("none", "int8"), default="none",
+                    help="serving-time weight quantization (C6)")
     ap.add_argument("--cache-layout", choices=("dense", "paged"),
                     default="dense")
     ap.add_argument("--block-size", type=int, default=16,
@@ -36,24 +49,35 @@ def main() -> None:
                     help="paged layout: pool size (default: dense worst case)")
     args = ap.parse_args()
 
-    cfg = reduced(REGISTRY[args.arch])
-    model = Model(cfg)
-    eng = ServingEngine(model, max_batch=args.max_batch,
-                        max_len=args.max_len,
+    names = (args.fleet.split(",") if args.fleet else [args.arch])
+    cfgs = [reduced(REGISTRY[n]) for n in names]
+    maxima = (maxima_for(*cfgs, seq_max=args.max_len)
+              if args.fleet else None)
+    spec = RuntimeSpec(
+        arch=cfgs[0], maxima=maxima,
+        execution=ExecutionSpec(matmul_backend=args.kernels,
+                                quant=args.quant),
+        memory=MemorySpec(cache_layout=args.cache_layout,
+                          max_batch=args.max_batch, max_len=args.max_len,
+                          block_size=args.block_size,
+                          num_blocks=args.num_blocks))
+    eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
                         sampling=SamplingParams(temperature=args.temperature,
-                                                top_k=40),
-                        matmul_backend=args.kernels,
-                        cache_layout=args.cache_layout,
-                        block_size=args.block_size,
-                        num_blocks=args.num_blocks)
-    eng.load(model.init(jax.random.PRNGKey(0)))
+                                                top_k=40))
+    if args.fleet:
+        model_ids = [eng.add_model(Model(c).init(jax.random.PRNGKey(i)), c)
+                     for i, c in enumerate(cfgs)]
+    else:
+        eng.load(Model.from_spec(spec).init(jax.random.PRNGKey(0)))
+        model_ids = [0]
 
     rng = jax.random.PRNGKey(7)
     for i in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = int(jax.random.randint(k, (), 4, args.max_len // 2))
         prompt = list(range(1, plen + 1))
-        eng.submit(prompt, max_new_tokens=args.max_new)
+        eng.submit(prompt, max_new_tokens=args.max_new,
+                   model=model_ids[i % len(model_ids)])
 
     t0 = time.time()
     done = eng.run_to_completion(sync_every=args.sync_every)
@@ -61,6 +85,9 @@ def main() -> None:
     total_new = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new / dt:,.0f} tok/s)")
+    if args.fleet:
+        print(f"fleet: {names} served by ONE fused step "
+              f"(decode compilations = {eng.compilations['decode']})")
     print("compile accounting:", eng.compilations)
     print(f"host traffic: {eng.stats['device_gets']} bulk device_gets over "
           f"{eng.stats['decode_steps']} fused decode steps")
@@ -69,7 +96,7 @@ def main() -> None:
         print(f"paged pool: {s.total_blocks} x {args.block_size}-token "
               f"blocks, {eng.stats['preemptions']} preemptions")
     for r in done[:3]:
-        print(f"  req {r.uid}: prompt[:6]={r.prompt[:6]} "
+        print(f"  req {r.uid} (model {r.model}): prompt[:6]={r.prompt[:6]} "
               f"-> {r.generated[:10]}...")
 
 

@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import REGISTRY, reduced
 from repro.data.pipeline import SyntheticLMStream

@@ -325,7 +325,6 @@ def paged_write_slot(idx_vec: jax.Array, block_tables: jax.Array,
     slot finished but not yet harvested) is routed to the null block, so
     the fused decode step stays safe with zero host intervention.
     """
-    b_ = idx_vec.shape[0]
     t_max = block_tables.shape[1] * block_size
     safe = jnp.minimum(idx_vec, t_max - 1)
     blk = jnp.take_along_axis(block_tables, (safe // block_size)[:, None],

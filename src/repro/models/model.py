@@ -78,11 +78,27 @@ class ModelOptions:
     # block tables.
     paged_attn_impl: str = "gather"
 
+    @classmethod
+    def from_execution(cls, ex) -> "ModelOptions":
+        """Lower a ``core.spec.ExecutionSpec`` onto the zoo's build-time
+        options — the one place the two vocabularies meet."""
+        return cls(param_dtype=ex.param_dtype,
+                   compute_dtype=ex.compute_dtype,
+                   grouped_gqa=ex.grouped_gqa,
+                   matmul_backend=ex.matmul_backend,
+                   paged_attn_impl=ex.paged_attn_impl)
+
 
 class Model:
     def __init__(self, cfg: ArchConfig, options: ModelOptions | None = None):
         self.cfg = cfg
         self.opt = options or ModelOptions()
+
+    @classmethod
+    def from_spec(cls, spec) -> "Model":
+        """Build the zoo model a ``core.spec.RuntimeSpec`` describes; every
+        execution knob is read from ``spec.execution`` (single source)."""
+        return cls(spec.arch, ModelOptions.from_execution(spec.execution))
 
     def _mm_ctx(self):
         if self.opt.matmul_backend != "xla":
@@ -542,7 +558,6 @@ class Model:
         """
         cfg = self.cfg
         x, positions = self._embed_inputs(params, batch)
-        s = batch["tokens"].shape[1]
 
         def ffn_half(h, lp):
             # SP residual pinning only — prefill never had the scan-carry
@@ -754,7 +769,6 @@ def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
     a gather (a gather across the sharded vocab axis would force GSPMD to
     all-gather the full [B, S, V] logits on every device)."""
     lse = jax.nn.logsumexp(logits, axis=-1)
-    v = logits.shape[-1]
     hit = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1) \
         == targets[..., None]
     gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)

@@ -156,7 +156,6 @@ def ssm_init_state(cfg: ArchConfig, batch: int, abstract: bool = False):
 def ssm_decode(x: jax.Array, p: dict, cfg: ArchConfig,
                state: SSMState) -> tuple[jax.Array, SSMState]:
     """One-token decode.  x: [B, 1, d]."""
-    s_cfg = cfg.ssm
     b_, one, d = x.shape
     d_inner, _, n = dims(cfg)
     xz = apply_dense(x[:, 0], p["in_proj"])

@@ -34,10 +34,26 @@ Cache layouts (the paper's tiling discipline applied to KV memory):
   harvest.  When the pool runs dry mid-flight the most recently admitted
   slot is preempted (its tokens are banked and the request re-queued for
   recompute-resume), so the oldest request always completes.
+
+Configuration surface: the engine is built from one frozen
+``core.spec.RuntimeSpec`` — ``ServingEngine(spec)``.  Every knob the
+constructor used to take piecemeal (``matmul_backend``, ``cache_layout``,
+``block_size``, ``num_blocks``) now lives in ``spec.execution`` /
+``spec.memory``; the old ``ServingEngine(model, kwarg=...)`` spellings
+keep working for one release behind ``DeprecationWarning`` shims.
+
+Multi-topology serving (the paper's §3.12 payoff): ``ServingEngine(spec,
+maxima=...)`` compiles the register-driven ``serving.fabric`` at the
+maxima instead of one fixed architecture.  ``add_model(params, arch)``
+packs any dense-family model into the device-resident weight table, each
+slot carries its model's topology registers inside ``SlotState``, and the
+one fused decode step serves a mixed fleet — continuous batching *across
+models*, zero retraces.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -45,9 +61,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
-                               PagingConfig, blocks_for_tokens)
+                               blocks_for_tokens)
+from repro.core.spec import ExecutionSpec, MemorySpec, RuntimeSpec
 from repro.models import backend
 from repro.models.model import Model
+from repro.serving.fabric import N_REGS, DecodeFabric
 from repro.serving.sampling import SamplingParams, sample_per_slot
 
 
@@ -64,6 +82,8 @@ class Request:
     # tokens generated before a preemption; on re-admission they extend
     # the prompt (recompute-resume) and still count against the budget
     prefix: list[int] = dataclasses.field(default_factory=list)
+    # fleet member serving this request (multi-topology mode; 0 otherwise)
+    model: int = 0
 
 
 class SlotState(NamedTuple):
@@ -81,6 +101,7 @@ class SlotState(NamedTuple):
     top_p: jax.Array   # [B]    f32  nucleus threshold (1 = disabled)
     buf: jax.Array     # [B, max_len] i32 generated tokens
     rng: jax.Array     # PRNG key threaded through the fused step
+    topo: jax.Array    # [B, N_REGS] i32 per-slot topology registers
 
 
 def _buckets(max_len: int, smallest: int = 32) -> list[int]:
@@ -92,53 +113,146 @@ def _buckets(max_len: int, smallest: int = 32) -> list[int]:
     return out
 
 
+def _resolve_spec(spec, maxima, max_batch, max_len, matmul_backend,
+                  cache_layout, block_size, num_blocks):
+    """Normalize the constructor surface onto one ``RuntimeSpec``.
+
+    Returns ``(spec, model)``; ``model`` is the caller's ``Model``
+    instance when the legacy model-first spelling was used (kept so the
+    inherit path can reuse it without re-tracing).  The legacy per-knob
+    kwargs are deprecation shims: they still work, warn once, and are
+    folded into the spec so everything downstream reads one surface.
+    """
+    legacy = {k: v for k, v in (("matmul_backend", matmul_backend),
+                                ("cache_layout", cache_layout),
+                                ("block_size", block_size),
+                                ("num_blocks", num_blocks)) if v is not None}
+    if legacy:
+        warnings.warn(
+            "ServingEngine(" + ", ".join(f"{k}=..." for k in sorted(legacy))
+            + ") is deprecated; configure these through core.spec."
+              "RuntimeSpec — execution=ExecutionSpec(matmul_backend=...), "
+              "memory=MemorySpec(cache_layout=..., block_size=..., "
+              "num_blocks=...) — and pass the spec to ServingEngine",
+            DeprecationWarning, stacklevel=3)
+    if isinstance(spec, Model):
+        model = spec
+        opt = model.opt
+        ex = ExecutionSpec(
+            matmul_backend=legacy.get("matmul_backend", opt.matmul_backend),
+            paged_attn_impl=opt.paged_attn_impl,
+            param_dtype=opt.param_dtype,
+            compute_dtype=opt.compute_dtype,
+            grouped_gqa=opt.grouped_gqa)
+        mem = MemorySpec(
+            cache_layout=legacy.get("cache_layout", "dense"),
+            max_batch=8 if max_batch is None else max_batch,
+            max_len=512 if max_len is None else max_len,
+            block_size=legacy.get("block_size", 16),
+            num_blocks=legacy.get("num_blocks"))
+        return RuntimeSpec(arch=model.cfg, maxima=maxima, execution=ex,
+                           memory=mem), model
+    if not isinstance(spec, RuntimeSpec):
+        raise TypeError(
+            "ServingEngine expects a core.spec.RuntimeSpec (or a legacy "
+            f"Model), got {type(spec).__name__}")
+    ex, mem = spec.execution, spec.memory
+    if "matmul_backend" in legacy:
+        ex = dataclasses.replace(ex, matmul_backend=legacy["matmul_backend"])
+    mem_kw = {k: v for k, v in legacy.items()
+              if k in ("cache_layout", "block_size", "num_blocks")}
+    if max_batch is not None:
+        mem_kw["max_batch"] = max_batch
+    if max_len is not None:
+        mem_kw["max_len"] = max_len
+    if mem_kw:
+        mem = dataclasses.replace(mem, **mem_kw)
+    if maxima is None:
+        maxima = spec.maxima
+    if ex is not spec.execution or mem is not spec.memory \
+            or maxima is not spec.maxima:
+        spec = dataclasses.replace(spec, execution=ex, memory=mem,
+                                   maxima=maxima)
+    return spec, None
+
+
 class ServingEngine:
-    def __init__(self, model: Model, *, max_batch: int = 8,
-                 max_len: int = 512,
+    def __init__(self, spec: RuntimeSpec | Model, *,
+                 maxima=None, max_models: int = 4,
                  sampling: SamplingParams = SamplingParams(),
                  rng: jax.Array | None = None,
+                 max_batch: int | None = None,
+                 max_len: int | None = None,
                  matmul_backend: str | None = None,
-                 cache_layout: str = "dense",
-                 block_size: int = 16,
+                 cache_layout: str | None = None,
+                 block_size: int | None = None,
                  num_blocks: int | None = None):
-        cfg = model.cfg
+        spec, model = _resolve_spec(spec, maxima, max_batch, max_len,
+                                    matmul_backend, cache_layout,
+                                    block_size, num_blocks)
+        cfg = spec.arch
         if cfg.family == "encoder":
             raise ValueError("encoder-only archs have no decode step")
-        if cache_layout not in ("dense", "paged"):
-            raise ValueError(f"unknown cache_layout {cache_layout!r}")
-        self.model = model
+        self.spec = spec
         self.cfg: ArchConfig = cfg
-        self.max_batch = max_batch
-        self.max_len = max_len
+        self.max_batch = spec.memory.max_batch
+        self.max_len = spec.memory.max_len
         self.sampling = sampling
-        self.buckets = _buckets(max_len)
-        # engine-level kernel routing ("xla" | "pallas"); None inherits the
-        # model's ModelOptions.matmul_backend.  An explicit engine setting
-        # must win even over a pallas-configured model, so tracing goes
-        # through a shadow Model carrying the effective backend (nested
-        # backend.use() contexts would let the model's innermost win).
-        self.matmul_backend = matmul_backend or model.opt.matmul_backend
-        if self.matmul_backend == model.opt.matmul_backend:
-            self._traced_model = model
+        self.buckets = _buckets(self.max_len)
+        self.matmul_backend = spec.execution.matmul_backend
+
+        # ---- compute path: one fixed model, or the register fabric -------
+        if spec.maxima is not None:
+            # multi-topology mode: one compiled step at the maxima serves a
+            # fleet of models selected by per-slot registers (add_model)
+            if spec.execution.quant == "int8":
+                raise ValueError(
+                    "quant='int8' is not yet supported in multi-topology "
+                    "mode (the fabric's model table packs float weights)")
+            if spec.execution.matmul_backend != "xla":
+                raise ValueError(
+                    f"matmul_backend={spec.execution.matmul_backend!r} is "
+                    "not yet supported in multi-topology mode: the fabric's "
+                    "per-slot weight gathers do not route through the "
+                    "tiled-kernel backend (use the default 'xla')")
+            self.fabric: DecodeFabric | None = DecodeFabric(
+                spec.maxima, max_models, cfg,
+                compute_dtype=spec.execution.compute_dtype,
+                param_dtype=spec.execution.param_dtype)
+            self.fabric.check_member(cfg)
+            self.model: Model | None = None
+            self._traced_model: Model | None = None
+            self.fleet: list[ArchConfig | None] = [None] * max_models
+            self._fleet_rows: list[list[int] | None] = [None] * max_models
         else:
-            self._traced_model = Model(model.cfg, dataclasses.replace(
-                model.opt, matmul_backend=self.matmul_backend))
+            self.fabric = None
+            # single source of truth: the backend every trace uses is
+            # spec.execution.matmul_backend.  A caller's Model instance is
+            # kept when it already agrees; with a legacy override the
+            # traced model is rebuilt around the spec's backend but keeps
+            # its other build options (remat/unroll are training-side
+            # knobs the spec does not model — the shim must not reset
+            # them)
+            if model is None:
+                self.model = Model.from_spec(spec)
+            elif model.opt.matmul_backend == self.matmul_backend:
+                self.model = model
+            else:
+                self.model = Model(cfg, dataclasses.replace(
+                    model.opt, matmul_backend=self.matmul_backend))
+            self._traced_model = self.model
 
         # ---- cache layout -------------------------------------------------
-        if cache_layout == "paged":
-            if cfg.family not in ("dense", "vlm", "moe"):
-                raise ValueError("paged KV cache unsupported for family "
-                                 f"{cfg.family!r}")
-            if max_len % block_size or self.buckets[0] % block_size:
+        self.paging = spec.memory.paging()
+        max_batch, max_len = self.max_batch, self.max_len
+        if self.paging is not None:
+            bs = self.paging.block_size
+            if self.buckets[0] % bs:
                 raise ValueError(
-                    f"block_size={block_size} must divide max_len={max_len} "
-                    f"and the smallest prefill bucket {self.buckets[0]}")
-            if num_blocks is None:   # worst-case pool == dense capacity
-                num_blocks = max_batch * (max_len // block_size)
-            self.paging: PagingConfig | None = PagingConfig(
-                block_size=block_size, num_blocks=num_blocks)
+                    f"block_size={bs} must divide the smallest prefill "
+                    f"bucket {self.buckets[0]}")
             self.allocator = BlockAllocator(self.paging)
-            self.blocks_per_slot = max_len // block_size
+            self.blocks_per_slot = max_len // bs
             self._tables = [[NULL_BLOCK] * self.blocks_per_slot
                             for _ in range(max_batch)]
             self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
@@ -146,7 +260,6 @@ class ServingEngine:
             self.block_tables: jax.Array | None = jnp.zeros(
                 (max_batch, self.blocks_per_slot), jnp.int32)
         else:
-            self.paging = None
             self.allocator = None
             self.block_tables = None
         # host mirrors for block budgeting (exact at sync points; between
@@ -159,6 +272,12 @@ class ServingEngine:
 
         self.params: Any = None
         self.cache: Any = None
+        if self.fabric is not None:
+            # the fabric's synthesis-time buffers exist before any model is
+            # loaded — add_model only writes device data into them
+            self.params = self.fabric.init_table()
+            self.cache = self.fabric.init_cache(max_batch, max_len,
+                                                paging=self.paging)
         self.state: SlotState = self._init_state(
             rng if rng is not None else jax.random.PRNGKey(0))
         self.slot_req: list[Request | None] = [None] * max_batch
@@ -193,16 +312,52 @@ class ServingEngine:
             top_k=jnp.zeros((B,), jnp.int32),
             top_p=jnp.ones((B,), jnp.float32),
             buf=jnp.zeros((B, self.max_len), jnp.int32),
-            rng=rng)
+            rng=rng,
+            topo=jnp.zeros((B, N_REGS), jnp.int32))
 
     def load(self, params) -> None:
+        """Install weights (quantized here when ``spec.execution.quant``
+        asks for it).  Multi-topology mode: equivalent to
+        ``add_model(params)`` for the engine's own architecture."""
+        if self.fabric is not None:
+            self.add_model(params)
+            return
+        if self.spec.execution.quant == "int8":
+            from repro.core.serve_quant import quantize_params
+            params = quantize_params(params)
         self.params = params
         self.cache = self.model.init_cache(self.max_batch, self.max_len,
                                            paging=self.paging)
 
+    def add_model(self, params, arch: ArchConfig | None = None) -> int:
+        """Pack one fleet member's weights into the fabric's model table
+        and return its model id (pass to ``submit(..., model=id)``).
+
+        A device scatter, never a retrace: the table rows are synthesis-
+        time buffers, loading a model is the paper's weight-write step.
+        """
+        if self.fabric is None:
+            raise ValueError(
+                "add_model requires multi-topology mode — construct the "
+                "engine with ServingEngine(spec, maxima=...)")
+        if isinstance(arch, RuntimeSpec):
+            arch = arch.arch
+        arch = arch or self.cfg
+        mid = next((i for i, a in enumerate(self.fleet) if a is None), None)
+        if mid is None:
+            raise ValueError(
+                f"model table full ({self.fabric.max_models} rows); "
+                "construct the engine with a larger max_models")
+        row = self.fabric.pack_member(arch, params)
+        self.params = self.fabric.insert_model(self.params, row, mid)
+        self.fleet[mid] = arch
+        self._fleet_rows[mid] = self.fabric.topo_row(arch, mid)
+        return mid
+
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
                eos_id: int | None = None,
-               sampling: SamplingParams | None = None) -> int:
+               sampling: SamplingParams | None = None,
+               model: int = 0) -> int:
         # reject at the door: raising later, mid-drain, would abort
         # run_to_completion with live requests still in flight.  The guard
         # mirrors the decode finish condition (index >= max_len): every
@@ -222,9 +377,22 @@ class ServingEngine:
                 raise ValueError(
                     f"prompt needs {need} blocks but the pool has only "
                     f"{self.paging.num_blocks}; increase num_blocks")
+        if self.fabric is not None:
+            if not 0 <= model < len(self.fleet) or self.fleet[model] is None:
+                loaded = [i for i, a in enumerate(self.fleet) if a is not None]
+                raise ValueError(f"model id {model} is not loaded "
+                                 f"(loaded ids: {loaded}); call add_model")
+            vocab = self.fleet[model].vocab_size
+            if prompt and not all(0 <= t < vocab for t in prompt):
+                raise ValueError(
+                    f"prompt contains token ids outside model {model}'s "
+                    f"vocab [0, {vocab})")
+        elif model != 0:
+            raise ValueError("submit(model=...) requires multi-topology "
+                             "mode (ServingEngine(spec, maxima=...))")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
-                                  eos_id, sampling))
+                                  eos_id, sampling, model=model))
         return self._uid
 
     # ------------------------------------------------------------------
@@ -239,6 +407,13 @@ class ServingEngine:
             logits, cache = self._traced_model.prefill(params, batch,
                                                        max_len=cache_len)
             return logits, cache
+
+    def _prefill_fabric_impl(self, bucket: int, params, tokens, topo):
+        """Fabric prefill: the member's topology registers are device data,
+        so every fleet model shares this bucket's one compilation."""
+        with backend.use(self.matmul_backend):
+            cache_len = bucket if self.paging is not None else self.max_len
+            return self.fabric.prefill(params, topo, tokens, cache_len)
 
     def _insert_impl(self, global_cache, one_cache, slot, _bucket):
         def put(g, o):
@@ -263,9 +438,12 @@ class ServingEngine:
         return jax.tree.map(put, pool, one_cache)
 
     def _admit_slot_impl(self, state: SlotState, last_logits, slot, plen,
-                         budget, eos, temp, top_k, top_p) -> SlotState:
+                         budget, eos, temp, top_k, top_p,
+                         topo) -> SlotState:
         """Seat one prefilled request: sample its first token and reset
-        every per-slot field — all on device, no host round trip."""
+        every per-slot field — all on device, no host round trip.
+        ``topo`` writes the slot's topology registers (zeros when the
+        engine serves a single fixed architecture)."""
         rng, k = jax.random.split(state.rng)
         first = sample_per_slot(last_logits, k, temp[None], top_k[None],
                                 top_p[None])[0]
@@ -286,7 +464,8 @@ class ServingEngine:
             top_k=state.top_k.at[slot].set(top_k),
             top_p=state.top_p.at[slot].set(top_p),
             buf=state.buf.at[slot].set(0).at[slot, 0].set(first),
-            rng=rng)
+            rng=rng,
+            topo=state.topo.at[slot].set(topo))
 
     def _evict_slot_impl(self, state: SlotState, slot) -> SlotState:
         """Preemption: park a slot as idle (its tokens were banked on the
@@ -303,9 +482,16 @@ class ServingEngine:
         host syncs."""
         with backend.use(self.matmul_backend):
             rng, k = jax.random.split(state.rng)
-            logits, cache = self._traced_model.decode_step(
-                params, cache, state.last, state.index,
-                block_tables=block_tables)
+            if self.fabric is not None:
+                logits, cache = self.fabric.decode_step(
+                    params, cache, state.last, state.index, state.topo,
+                    block_tables=block_tables,
+                    paged_attn_impl=self.spec.execution.paged_attn_impl,
+                    interpret=jax.default_backend() != "tpu")
+            else:
+                logits, cache = self._traced_model.decode_step(
+                    params, cache, state.last, state.index,
+                    block_tables=block_tables)
             toks = sample_per_slot(logits[:, 0], k, state.temp, state.top_k,
                                    state.top_p)
 
@@ -358,15 +544,28 @@ class ServingEngine:
                     break
             self.queue.pop(0)
             if bucket not in self._prefill:
-                self._prefill[bucket] = jax.jit(
-                    lambda p, t, e, _b=bucket: self._prefill_impl(_b, p, t, e))
+                if self.fabric is not None:
+                    self._prefill[bucket] = jax.jit(
+                        lambda p, t, tp, _b=bucket:
+                        self._prefill_fabric_impl(_b, p, t, tp))
+                else:
+                    self._prefill[bucket] = jax.jit(
+                        lambda p, t, e, _b=bucket:
+                        self._prefill_impl(_b, p, t, e))
             toks = jnp.asarray(prompt + [0] * (bucket - plen), jnp.int32)[None]
-            extras = {}
-            if self.cfg.frontend is not None:
-                extras["frontend"] = jnp.zeros(
-                    (1, self.cfg.frontend.num_tokens, self.cfg.d_model),
-                    jnp.bfloat16)
-            logits, one_cache = self._prefill[bucket](self.params, toks, extras)
+            topo_row = jnp.zeros((N_REGS,), jnp.int32)
+            if self.fabric is not None:
+                topo_row = jnp.asarray(self._fleet_rows[req.model], jnp.int32)
+                logits, one_cache = self._prefill[bucket](self.params, toks,
+                                                          topo_row)
+            else:
+                extras = {}
+                if self.cfg.frontend is not None:
+                    extras["frontend"] = jnp.zeros(
+                        (1, self.cfg.frontend.num_tokens, self.cfg.d_model),
+                        jnp.bfloat16)
+                logits, one_cache = self._prefill[bucket](self.params, toks,
+                                                          extras)
             if self.paging is not None:
                 self._slot_blocks[slot] = blocks
                 row = blocks + [NULL_BLOCK] * (self.blocks_per_slot
@@ -383,7 +582,7 @@ class ServingEngine:
                 self.state, logits[:, plen - 1], jnp.int32(slot),
                 jnp.int32(plen), jnp.int32(budget),
                 jnp.int32(-1 if req.eos_id is None else req.eos_id),
-                temp, top_k, top_p)
+                temp, top_k, top_p, topo_row)
             req.slot = slot
             self.slot_req[slot] = req
             self._plen[slot] = plen

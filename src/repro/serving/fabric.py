@@ -1,0 +1,442 @@
+"""Register-driven multi-topology decode fabric.
+
+``core.adaptive.AdaptiveEngine`` proves the paper's C1 claim for
+full-sequence encoders: one compiled step, any topology within maxima,
+selected by register *data*.  This module is the serving-side
+counterpart: a **padded maximal GQA causal LM** whose prefill/decode
+steps are compiled once at ``Maxima`` shapes and then serve a mixed
+fleet of models — every batch slot may run a *different* topology
+(heads / layers / d_model / d_ff / vocab) and a *different* weight set,
+with zero retraces.  NPE's overlay argument (one fabric, many NLP
+models) meets continuous batching: requests from different models share
+one fused decode dispatch.
+
+Mechanics:
+
+* **model table** — every fleet member's weights are packed (KV heads
+  replicated to the full head count, exactly ``core.adaptive.pack``'s
+  GQA trick, then zero-padded to maxima) into row ``m`` of a
+  ``[max_models, ...]`` device table.  Loading a model is a device
+  scatter — the paper's weight-loading units, no recompile.
+* **topology registers** — a ``[B, N_REGS]`` int32 array rides in the
+  engine's ``SlotState``; column ``REG_MODEL`` picks the table row, the
+  rest are the live extents.  ``core.masking``'s per-slot variants keep
+  idle lanes (dead heads, dead layers, dead d_model/d_ff/vocab lanes)
+  from contaminating live compute — clock gating as masking.
+* **structural template** — like the FPGA fabric, some choices are
+  frozen at synthesis: norm kind, activation, RoPE theta and the PE
+  lane width (head_dim).  ``check_member`` rejects models that would
+  need a different fabric with an actionable message.
+
+Both cache layouts work: dense ``[L, B, S, H, hd]`` rows or the pooled
+paged layout (``core.paging``), including the Pallas flash-decode kernel
+with padded-head-lane masking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import masking
+from repro.core.paging import PagingConfig
+from repro.core.registers import Maxima
+from repro.models.attention import KVCache, paged_write_slot
+from repro.models.layers import activate, apply_rope, is_gated
+
+# Topology register columns (the per-slot AXI-Lite register file).
+REG_MODEL, REG_HEADS, REG_LAYERS, REG_DMODEL, REG_DFF, REG_VOCAB = range(6)
+N_REGS = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricTemplate:
+    """Structural choices frozen at 'synthesis' — every fleet member must
+    match them (they change the compiled step, not just register data)."""
+
+    norm: str            # "rmsnorm" | "layernorm"
+    activation: str      # swiglu | geglu | gelu | relu
+    rope_theta: float
+    head_dim: int        # the PE lane width; fixed across the fleet
+
+    @classmethod
+    def of(cls, arch: ArchConfig) -> "FabricTemplate":
+        return cls(norm=arch.norm, activation=arch.activation,
+                   rope_theta=arch.rope_theta,
+                   head_dim=arch.resolved_head_dim)
+
+
+class DecodeFabric:
+    """One compiled prefill/decode pair serving any dense-family topology
+    within ``maxima`` from a ``max_models``-row weight table."""
+
+    def __init__(self, maxima: Maxima, max_models: int,
+                 template: FabricTemplate | ArchConfig,
+                 compute_dtype: Any = jnp.bfloat16,
+                 param_dtype: Any = jnp.float32):
+        if isinstance(template, ArchConfig):
+            template = FabricTemplate.of(template)
+        if template.head_dim != maxima.head_dim_max:
+            raise ValueError(
+                f"fabric head_dim {template.head_dim} != maxima.head_dim_max "
+                f"{maxima.head_dim_max}: the lane width is fixed at "
+                "synthesis (RoPE pairs by head_dim, so it cannot be a "
+                "runtime register); synthesize at the fleet's common "
+                "head_dim")
+        self.mx = maxima
+        self.max_models = max_models
+        self.template = template
+        self.compute_dtype = compute_dtype
+        self.param_dtype = param_dtype
+        self.hd = template.head_dim
+
+    # ------------------------------------------------------------------
+    # Fleet membership
+    # ------------------------------------------------------------------
+    def check_member(self, arch: ArchConfig) -> None:
+        """Reject models this fabric cannot serve, with the reason."""
+        t = self.template
+        if arch.family != "dense":
+            raise ValueError(
+                f"{arch.name}: multi-topology serving covers the dense GQA "
+                f"family; family {arch.family!r} needs its own engine")
+        for knob, want, got in (("norm", t.norm, arch.norm),
+                                ("activation", t.activation, arch.activation),
+                                ("positional", "rope", arch.positional)):
+            if want != got:
+                raise ValueError(
+                    f"{arch.name}: {knob}={got!r} differs from the fabric's "
+                    f"synthesized {knob}={want!r}; structural knobs are "
+                    "frozen at compile time (re-synthesize a fabric with "
+                    "the fleet's shared structure)")
+        if arch.rope_theta != t.rope_theta:
+            raise ValueError(
+                f"{arch.name}: rope_theta={arch.rope_theta} differs from "
+                f"the fabric's {t.rope_theta}")
+        if arch.resolved_head_dim != self.hd:
+            raise ValueError(
+                f"{arch.name}: head_dim={arch.resolved_head_dim} != fabric "
+                f"lane width {self.hd}; head_dim is not a runtime register")
+        mx = self.mx
+        over = [f"{n}={v} > {m}" for n, v, m in (
+            ("heads", arch.num_heads, mx.heads_max),
+            ("layers", arch.num_layers, mx.layers_enc_max),
+            ("d_model", arch.d_model, mx.d_model_max),
+            ("d_ff", arch.d_ff, mx.d_ff_max),
+            ("vocab", arch.vocab_size, mx.vocab)) if v > m]
+        if over:
+            raise ValueError(
+                f"{arch.name} exceeds the synthesized maxima "
+                f"({'; '.join(over)}); re-synthesis (recompile) required")
+
+    def topo_row(self, arch: ArchConfig, model_id: int) -> list[int]:
+        """The slot register values for one fleet member."""
+        return [model_id, arch.num_heads, arch.num_layers, arch.d_model,
+                arch.d_ff, arch.vocab_size]
+
+    # ------------------------------------------------------------------
+    # Model table (synthesis-time buffers + weight loading units)
+    # ------------------------------------------------------------------
+    def _norm_shape(self, *lead: int) -> dict:
+        z = lambda *s: jnp.zeros(s, self.param_dtype)
+        p = {"scale": z(*lead, self.mx.d_model_max)}
+        if self.template.norm == "layernorm":
+            p["bias"] = z(*lead, self.mx.d_model_max)
+        return p
+
+    def init_table(self) -> dict:
+        mx, M, L = self.mx, self.max_models, self.mx.layers_enc_max
+        D, F, V, HO = (mx.d_model_max, mx.d_ff_max, mx.vocab,
+                       mx.heads_max * self.hd)
+        z = lambda *s: jnp.zeros(s, self.param_dtype)
+        layers = {
+            "ln1": self._norm_shape(M, L),
+            "wq": z(M, L, D, HO), "bq": z(M, L, HO),
+            "wk": z(M, L, D, HO), "bk": z(M, L, HO),
+            "wv": z(M, L, D, HO), "bv": z(M, L, HO),
+            "wo": z(M, L, HO, D),
+            "ln2": self._norm_shape(M, L),
+            "w1": z(M, L, D, F), "b1": z(M, L, F),
+            "w2": z(M, L, F, D), "b2": z(M, L, D),
+        }
+        if is_gated(self.template.activation):
+            layers["wg"] = z(M, L, D, F)
+            layers["bg"] = z(M, L, F)
+        return {"embed": z(M, V, D), "lm_head": z(M, V, D),
+                "final_norm": self._norm_shape(M), "layers": layers}
+
+    def pack_member(self, arch: ArchConfig, params: dict) -> dict:
+        """Zoo-model params -> one zero-padded table row (KV weights
+        replicated across the head group, ``core.adaptive.pack``'s GQA
+        trick, so runtime compute is uniform MHA over ``heads`` lanes)."""
+        self.check_member(arch)
+        mx, L = self.mx, self.mx.layers_enc_max
+        h, kv, hd = arch.num_heads, arch.num_kv_heads, self.hd
+        rep = h // kv
+
+        def pad(a, *shape):
+            a = jnp.asarray(a, self.param_dtype)
+            return jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, shape)])
+
+        def rep_kv(w):  # [l, d, kv*hd] -> [l, d, h*hd] (head-grouped order)
+            l_, d_ = w.shape[:2]
+            return jnp.repeat(w.reshape(l_, d_, kv, hd), rep, axis=2) \
+                .reshape(l_, d_, h * hd)
+
+        def rep_kv_b(b_):  # [l, kv*hd] -> [l, h*hd]
+            l_ = b_.shape[0]
+            return jnp.repeat(b_.reshape(l_, kv, hd), rep, axis=1) \
+                .reshape(l_, h * hd)
+
+        lp = params["layers"]
+        nl, D, F, HO = arch.num_layers, mx.d_model_max, mx.d_ff_max, \
+            mx.heads_max * hd
+
+        def bias_or_zeros(p, width):
+            # biases are always provisioned in the table; members without
+            # them (no qkv_bias, rmsnorm FFN) contribute exact zeros
+            return p.get("bias", jnp.zeros((nl, width), self.param_dtype))
+
+        def norm_row(p, *shape):
+            out = {"scale": pad(p["scale"], *shape)}
+            if self.template.norm == "layernorm":
+                out["bias"] = pad(p["bias"], *shape)
+            return out
+
+        attn = lp["attn"]
+        row_layers = {
+            "ln1": norm_row(lp["ln1"], L, D),
+            "wq": pad(attn["wq"]["kernel"], L, D, HO),
+            "bq": pad(bias_or_zeros(attn["wq"], h * hd), L, HO),
+            "wk": pad(rep_kv(attn["wk"]["kernel"]), L, D, HO),
+            "bk": pad(rep_kv_b(bias_or_zeros(attn["wk"], kv * hd)),
+                      L, HO),
+            "wv": pad(rep_kv(attn["wv"]["kernel"]), L, D, HO),
+            "bv": pad(rep_kv_b(bias_or_zeros(attn["wv"], kv * hd)),
+                      L, HO),
+            "wo": pad(attn["wo"]["kernel"], L, HO, D),
+            "ln2": norm_row(lp["ln2"], L, D),
+            "w1": pad(lp["ffn"]["w1"]["kernel"], L, D, F),
+            "b1": pad(bias_or_zeros(lp["ffn"]["w1"], arch.d_ff), L, F),
+            "w2": pad(lp["ffn"]["w2"]["kernel"], L, F, D),
+            "b2": pad(bias_or_zeros(lp["ffn"]["w2"], arch.d_model),
+                      L, D),
+        }
+        if is_gated(self.template.activation):
+            row_layers["wg"] = pad(lp["ffn"]["wg"]["kernel"], L, D, F)
+            row_layers["bg"] = pad(
+                bias_or_zeros(lp["ffn"]["wg"], arch.d_ff), L, F)
+        lm = params["embed"]["table"] if arch.tie_embeddings \
+            else params["lm_head"]["table"]
+        return {"embed": pad(params["embed"]["table"], mx.vocab, D),
+                "lm_head": pad(lm, mx.vocab, D),
+                "final_norm": norm_row(params["final_norm"], D),
+                "layers": row_layers}
+
+    @staticmethod
+    def insert_model(table: dict, row: dict, model_id: int) -> dict:
+        """Scatter one packed row into the table (the AXI weight write)."""
+        return jax.tree.map(lambda t, r: t.at[model_id].set(r), table, row)
+
+    # ------------------------------------------------------------------
+    # Decode cache (maxima-shaped; both layouts)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int,
+                   paging: PagingConfig | None = None) -> KVCache:
+        L, H, hd = self.mx.layers_enc_max, self.mx.heads_max, self.hd
+        if paging is not None:
+            shape = (L, paging.pool_blocks, paging.block_size, H, hd)
+        else:
+            shape = (L, batch, max_len, H, hd)
+        return KVCache(jnp.zeros(shape, jnp.bfloat16),
+                       jnp.zeros(shape, jnp.bfloat16))
+
+    # ------------------------------------------------------------------
+    # Masked compute
+    # ------------------------------------------------------------------
+    def _norm(self, x: jax.Array, p: dict, d_live: jax.Array) -> jax.Array:
+        if self.template.norm == "rmsnorm":
+            return masking.masked_rmsnorm_slots(x, p["scale"], d_live)
+        return masking.masked_layernorm_slots(x, p["scale"], p["bias"],
+                                              d_live)
+
+    @staticmethod
+    def _mm(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+            ) -> jax.Array:
+        """Per-slot dense: x [B,S,Din] @ w [B,Din,Dout] (+ b [B,Dout]),
+        bf16 weights / f32 accumulate — the ``backend.matmul`` contract."""
+        wb = w.astype(x.dtype)
+        y = jnp.einsum("bsd,bdo->bso", x.astype(jnp.float32),
+                       wb.astype(jnp.float32)).astype(x.dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)[:, None]
+        return y
+
+    def _qkv(self, xn: jax.Array, lp: dict, positions: jax.Array,
+             he: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Masked QKV projections at maxima head lanes; ``he`` is the
+        per-slot [B, 1, H, 1] live-head mask."""
+        B, S = xn.shape[:2]
+        H, hd = self.mx.heads_max, self.hd
+        shape = (B, S, H, hd)
+        q = self._mm(xn, lp["wq"], lp["bq"]).reshape(shape) * he
+        k = self._mm(xn, lp["wk"], lp["bk"]).reshape(shape) * he
+        v = self._mm(xn, lp["wv"], lp["bv"]).reshape(shape) * he
+        q = apply_rope(q, positions, self.template.rope_theta)
+        k = apply_rope(k, positions, self.template.rope_theta)
+        return q, k, v
+
+    def _attend(self, q: jax.Array, k: jax.Array, v: jax.Array,
+                live: jax.Array) -> jax.Array:
+        """Scores over live cache positions only ([B, S_kv] mask)."""
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) \
+            / jnp.sqrt(jnp.float32(self.hd))
+        s = jnp.where(live[:, None, None, :], s, masking.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+    def _ffn(self, xn: jax.Array, lp: dict, f_live: jax.Array) -> jax.Array:
+        fm = masking.slot_mask(self.mx.d_ff_max, f_live, xn.dtype)[:, None]
+        h1 = self._mm(xn, lp["w1"], lp["b1"])
+        if is_gated(self.template.activation):
+            h = activate(self._mm(xn, lp["wg"], lp["bg"]),
+                         self.template.activation) * h1
+        else:
+            h = activate(h1, self.template.activation)
+        return self._mm(h * fm, lp["w2"], lp["b2"])
+
+    def _unembed(self, x: jax.Array, table: dict, mid: jax.Array,
+                 d_live: jax.Array, v_live: jax.Array) -> jax.Array:
+        fn = jax.tree.map(lambda l: l[mid], table["final_norm"])
+        xn = self._norm(x, fn, d_live)
+        lm = table["lm_head"][mid]                       # [B, V, D]
+        logits = jnp.einsum("bsd,bvd->bsv", xn.astype(jnp.float32),
+                            lm.astype(jnp.float32))
+        vm = jnp.arange(self.mx.vocab)[None, None, :] < v_live[:, None, None]
+        # dead vocab lanes to NEG_INF so per-slot sampling (argmax /
+        # categorical) can never pick a token outside the live vocab
+        return jnp.where(vm, logits, masking.NEG_INF)
+
+    def _gather_layer(self, table: dict, mid: jax.Array,
+                      i: jax.Array) -> dict:
+        """Per-slot weights of layer ``i``: [B, ...] gathered by model id."""
+        return jax.tree.map(lambda l: l[mid, i], table["layers"])
+
+    # ------------------------------------------------------------------
+    # Prefill (B=1, one request) — same masked math at S > 1
+    # ------------------------------------------------------------------
+    def prefill(self, table: dict, topo: jax.Array, tokens: jax.Array,
+                max_len: int) -> tuple[jax.Array, KVCache]:
+        """tokens [1, S] + topo [N_REGS] -> (masked logits [1, S, V_max],
+        per-layer cache [L_max, 1, max_len, H_max, hd])."""
+        mx = self.mx
+        mid = topo[REG_MODEL][None]
+        d_live, h_live = topo[REG_DMODEL][None], topo[REG_HEADS][None]
+        f_live, v_live = topo[REG_DFF][None], topo[REG_VOCAB][None]
+        l_live = topo[REG_LAYERS][None]
+        S = tokens.shape[1]
+        emb = table["embed"][mid[0]].astype(self.compute_dtype)[tokens]
+        x = emb * masking.slot_mask(mx.d_model_max, d_live, emb.dtype)[:, None]
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        he = masking.slot_mask(mx.heads_max, h_live)[:, None, :, None] \
+            .astype(self.compute_dtype)
+        dm = masking.slot_mask(mx.d_model_max, d_live)[:, None] \
+            .astype(self.compute_dtype)
+        causal = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])
+
+        def body(h, i):
+            lp = self._gather_layer(table, mid, i)
+            xn = self._norm(h, lp["ln1"], d_live)
+            q, k, v = self._qkv(xn, lp, positions, he)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) \
+                / jnp.sqrt(jnp.float32(self.hd))
+            s = jnp.where(causal[None, None], s, masking.NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v) * he
+            a = self._mm(o.reshape(1, S, -1), lp["wo"]) * dm
+            h1 = h + a
+            f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
+                          f_live) * dm
+            h2 = h1 + f
+            out = jnp.where((i < l_live)[:, None, None], h2, h)
+            pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+            return out, (jnp.pad(k.astype(jnp.bfloat16), pad),
+                         jnp.pad(v.astype(jnp.bfloat16), pad))
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   jnp.arange(mx.layers_enc_max))
+        return self._unembed(x, table, mid, d_live, v_live), KVCache(ks, vs)
+
+    # ------------------------------------------------------------------
+    # Fused decode step (the multi-topology payoff)
+    # ------------------------------------------------------------------
+    def decode_step(self, table: dict, cache: KVCache, tokens: jax.Array,
+                    index: jax.Array, topo: jax.Array,
+                    block_tables: jax.Array | None = None,
+                    paged_attn_impl: str = "gather",
+                    interpret: bool = True) -> tuple[jax.Array, KVCache]:
+        """tokens [B, 1] + per-slot registers topo [B, N_REGS] -> (masked
+        logits [B, 1, V_max], new cache).  One topology per slot; register
+        values are data, so this traces exactly once."""
+        mx = self.mx
+        B = tokens.shape[0]
+        mid, h_live = topo[:, REG_MODEL], topo[:, REG_HEADS]
+        l_live, d_live = topo[:, REG_LAYERS], topo[:, REG_DMODEL]
+        f_live, v_live = topo[:, REG_DFF], topo[:, REG_VOCAB]
+        idx = jnp.asarray(index, jnp.int32)
+        emb = table["embed"][mid, tokens[:, 0]].astype(self.compute_dtype)
+        x = (emb * masking.slot_mask(mx.d_model_max, d_live, emb.dtype)
+             )[:, None]
+        positions = idx[:, None]
+        he = masking.slot_mask(mx.heads_max, h_live)[:, None, :, None] \
+            .astype(self.compute_dtype)
+        dm = masking.slot_mask(mx.d_model_max, d_live)[:, None] \
+            .astype(self.compute_dtype)
+        if block_tables is not None:
+            bs = cache.k.shape[2]
+            t_max = block_tables.shape[1] * bs
+            blk, off = paged_write_slot(idx, block_tables, bs)
+            live = jnp.arange(t_max)[None, :] <= idx[:, None]
+        else:
+            rows = jnp.arange(B)
+            live = jnp.arange(cache.k.shape[2])[None, :] <= idx[:, None]
+
+        def body(h, inp):
+            i, c = inp
+            lp = self._gather_layer(table, mid, i)
+            xn = self._norm(h, lp["ln1"], d_live)
+            q, k_new, v_new = self._qkv(xn, lp, positions, he)
+            if block_tables is not None:
+                k = c.k.at[blk, off].set(k_new[:, 0].astype(c.k.dtype))
+                v = c.v.at[blk, off].set(v_new[:, 0].astype(c.v.dtype))
+                if paged_attn_impl == "pallas":
+                    from repro.kernels.paged_attention import \
+                        paged_decode_attention
+                    lengths = jnp.minimum(idx + 1, t_max)
+                    o = paged_decode_attention(
+                        q[:, 0], k, v, block_tables, lengths,
+                        live_kv=h_live, interpret=interpret)[:, None]
+                else:
+                    kg = k[block_tables].reshape(B, t_max, mx.heads_max,
+                                                 self.hd)
+                    vg = v[block_tables].reshape(B, t_max, mx.heads_max,
+                                                 self.hd)
+                    o = self._attend(q, kg, vg, live)
+            else:
+                k = c.k.at[rows, idx].set(k_new[:, 0].astype(c.k.dtype))
+                v = c.v.at[rows, idx].set(v_new[:, 0].astype(c.v.dtype))
+                o = self._attend(q, k, v, live)
+            a = self._mm((o * he).reshape(B, 1, -1), lp["wo"]) * dm
+            h1 = h + a
+            f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
+                          f_live) * dm
+            h2 = h1 + f
+            out = jnp.where((i < l_live)[:, None, None], h2, h)
+            return out, KVCache(k, v)
+
+        x, new_cache = jax.lax.scan(
+            body, x, (jnp.arange(mx.layers_enc_max), cache))
+        return self._unembed(x, table, mid, d_live, v_live), new_cache

@@ -12,7 +12,6 @@ compression on the DP axis (shard_map variant).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -93,7 +93,6 @@ def test_idle_lanes_do_not_leak(engine):
     big = engine_ref.random_network(jax.random.PRNGKey(0), seq=32,
                                     d_model=96, heads=8, d_ff=192,
                                     layers_enc=4, vocab=100, out=100)
-    small_slice = dict(seq=16, d_model=48, heads=4, d_ff=96, layers_enc=2)
     params = pack(engine, big)
     regs = make_registers(sequence=16, heads=4, layers_enc=2, layers_dec=0,
                           embeddings=48, hidden=96, out=100)

@@ -10,7 +10,7 @@ from conftest import reduced_cfg
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, PagingConfig,
                                blocks_for_tokens)
 from repro.kernels.paged_attention import paged_decode_attention
-from repro.models.model import Model, ModelOptions
+from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams, sample_per_slot
 
@@ -171,39 +171,33 @@ def _run(model, params, reqs, **engine_kw):
 
 def test_preemption_resumes_bit_identical(qwen):
     """A pool that cannot sustain two full requests must preempt the
-    younger one and still produce both greedy streams unchanged."""
+    younger one and still produce both greedy streams unchanged.  The
+    pool holds exactly one max_len request (the legal minimum), so two
+    in-flight requests always collide."""
     model, params = qwen
     reqs = [(list(range(1, 9)), 20), (list(range(9, 17)), 20)]
-    _, ref = _run(model, params, reqs, max_batch=2, max_len=64)
-    eng, got = _run(model, params, reqs, max_batch=2, max_len=64,
+    _, ref = _run(model, params, reqs, max_batch=2, max_len=32)
+    eng, got = _run(model, params, reqs, max_batch=2, max_len=32,
                     cache_layout="paged", block_size=8, num_blocks=4)
     assert eng.stats["preemptions"] > 0
     assert [r.generated for r in got] == [r.generated for r in ref]
 
 
-def test_unadmittable_prompt_rejected_at_submit(qwen):
-    """A prompt needing more blocks than the whole pool must be rejected
-    at submit(), not left queued forever (step() would spin without
-    progress)."""
-    model, params = qwen
-    eng = ServingEngine(model, max_batch=2, max_len=64,
-                        sampling=SamplingParams(), cache_layout="paged",
-                        block_size=8, num_blocks=4)
-    eng.load(params)
-    with pytest.raises(ValueError, match="increase num_blocks"):
-        eng.submit(list(range(1, 41)), max_new_tokens=4)   # 5 blocks > 4
-    assert not eng.queue
-
-
-def test_pool_smaller_than_one_request_raises(qwen):
-    model, params = qwen
-    eng = ServingEngine(model, max_batch=2, max_len=64,
-                        sampling=SamplingParams(), cache_layout="paged",
-                        block_size=8, num_blocks=1)
-    eng.load(params)
-    eng.submit(list(range(1, 8)), max_new_tokens=30)
-    with pytest.raises(RuntimeError, match="pool exhausted"):
-        eng.run_to_completion()
+def test_pool_below_max_len_rejected_at_construction(qwen):
+    """A pool that could never admit a full-length request used to fail
+    mid-flight ('pool exhausted' RuntimeError) or strand prompts at
+    submit; the spec now rejects the geometry at construction, which
+    makes both of those late failure paths unreachable (any single
+    request fits the pool, so preemption always makes progress)."""
+    model, _ = qwen
+    with pytest.raises(ValueError, match="never be admitted"):
+        ServingEngine(model, max_batch=2, max_len=64,
+                      sampling=SamplingParams(), cache_layout="paged",
+                      block_size=8, num_blocks=4)    # 32 tokens < 64
+    from repro.core.spec import MemorySpec
+    with pytest.raises(ValueError, match="num_blocks >= 8"):
+        MemorySpec(cache_layout="paged", max_len=64, block_size=8,
+                   num_blocks=1)
 
 
 def test_decode_uses_final_cache_position(qwen):

@@ -278,6 +278,76 @@ def test_engine_backend_overrides_model_backend():
 
 
 # ---------------------------------------------------------------------------
+# RuntimeSpec surface + deprecation shims
+# ---------------------------------------------------------------------------
+def _greedy_stream(eng, params, prompt=(3, 1, 4, 1, 5), n=4):
+    eng.load(params)
+    uid = eng.submit(list(prompt), max_new_tokens=n)
+    done = eng.run_to_completion()
+    return next(r for r in done if r.uid == uid).generated
+
+
+def test_spec_engine_matches_legacy_engine():
+    """The new ServingEngine(RuntimeSpec) spelling must behave exactly
+    like the legacy model-first spelling."""
+    from repro.core.spec import MemorySpec, RuntimeSpec
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    legacy = ServingEngine(model, max_batch=2, max_len=32,
+                           sampling=SamplingParams())
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(max_batch=2, max_len=32))
+    new = ServingEngine(spec, sampling=SamplingParams())
+    assert new.model.opt.matmul_backend == new.spec.execution.matmul_backend
+    assert _greedy_stream(new, params) == _greedy_stream(legacy, params)
+
+
+def test_legacy_matmul_backend_kwarg_warns_and_matches():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="matmul_backend"):
+        old = ServingEngine(model, max_batch=2, max_len=32,
+                            sampling=SamplingParams(), matmul_backend="xla")
+    # the shim folds the kwarg into the one spec — no second source
+    assert old.spec.execution.matmul_backend == "xla"
+    assert old.matmul_backend == "xla"
+    quiet = ServingEngine(model, max_batch=2, max_len=32,
+                          sampling=SamplingParams())
+    assert _greedy_stream(old, params) == _greedy_stream(quiet, params)
+
+
+def test_legacy_cache_layout_kwargs_warn_and_match():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="cache_layout"):
+        paged = ServingEngine(model, max_batch=2, max_len=64,
+                              sampling=SamplingParams(),
+                              cache_layout="paged", block_size=8,
+                              num_blocks=16)
+    assert paged.spec.memory.cache_layout == "paged"
+    assert paged.paging.block_size == 8 and paged.paging.num_blocks == 16
+    dense = ServingEngine(model, max_batch=2, max_len=64,
+                          sampling=SamplingParams())
+    assert _greedy_stream(paged, params) == _greedy_stream(dense, params)
+
+
+def test_engine_reads_execution_from_one_source():
+    """satellite: no dataclasses.replace of the model's options — the
+    engine's traced model and the engine itself read spec.execution."""
+    from repro.core.spec import ExecutionSpec, MemorySpec, RuntimeSpec
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    spec = RuntimeSpec(arch=cfg,
+                       execution=ExecutionSpec(matmul_backend="pallas"),
+                       memory=MemorySpec(max_batch=2, max_len=32))
+    eng = ServingEngine(spec)
+    assert eng.matmul_backend == "pallas"
+    assert eng._traced_model.opt.matmul_backend == "pallas"
+    assert eng._traced_model is eng.model
+
+
+# ---------------------------------------------------------------------------
 # Sampling
 # ---------------------------------------------------------------------------
 def test_greedy_is_argmax():

@@ -1,0 +1,143 @@
+"""RuntimeSpec: the one configuration surface — lowering, ceilings,
+construction-time validation."""
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.configs import get_config
+from repro.core.registers import registers_for
+from repro.core.spec import (ExecutionSpec, MemorySpec, RuntimeSpec,
+                             maxima_for)
+
+
+# ---------------------------------------------------------------------------
+# registers() lowering round-trips through registers_for
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["qwen1.5-0.5b", "adaptor-bert",
+                                  "whisper-medium"])
+def test_registers_roundtrip(name):
+    cfg = get_config(name)
+    spec = RuntimeSpec(arch=cfg)
+    got = spec.registers(sequence=64)
+    want = registers_for(cfg, sequence=64)
+    for field in want._fields:
+        assert int(getattr(got, field)) == int(getattr(want, field)), field
+
+
+def test_static_registers_match_traced():
+    cfg = get_config("qwen1.5-0.5b")
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(max_len=64))
+    static = spec.static_registers()
+    regs = spec.registers(sequence=static["sequence"])
+    for k in ("sequence", "heads", "layers_enc", "layers_dec",
+              "embeddings", "hidden", "out"):
+        assert static[k] == int(getattr(regs, k)), k
+
+
+# ---------------------------------------------------------------------------
+# fits_within: exact maxima are a fit, one-over on any axis is not
+# ---------------------------------------------------------------------------
+def _exact_maxima(cfg, max_len):
+    return maxima_for(cfg, seq_max=max_len)
+
+
+def test_fits_within_at_exact_maxima():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(max_len=64))
+    mx = _exact_maxima(cfg, 64)
+    assert spec.fits_within(mx)
+    assert spec.violations(mx) == []
+
+
+@pytest.mark.parametrize("shrink", ["seq_max", "heads_max", "layers_enc_max",
+                                    "d_model_max", "d_ff_max", "out_max"])
+def test_fits_within_rejects_one_over(shrink):
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    spec = RuntimeSpec(arch=cfg, memory=MemorySpec(max_len=64))
+    mx = _exact_maxima(cfg, 64)
+    mx = mx._replace(**{shrink: getattr(mx, shrink) - 1})
+    assert not spec.fits_within(mx)
+    assert spec.violations(mx)
+
+
+def test_spec_with_maxima_validates_at_construction():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    small = _exact_maxima(cfg, 64)._replace(heads_max=cfg.num_heads - 1)
+    with pytest.raises(ValueError, match="re-synthesis"):
+        RuntimeSpec(arch=cfg, maxima=small, memory=MemorySpec(max_len=64))
+
+
+def test_maxima_for_covers_fleet():
+    a = reduced_cfg("qwen1.5-0.5b")
+    b = dataclasses.replace(a, name="b", d_model=48, num_heads=3,
+                            num_kv_heads=3, d_ff=96, vocab_size=96,
+                            num_layers=1)
+    mx = maxima_for(a, b, seq_max=64)
+    for cfg in (a, b):
+        assert RuntimeSpec(arch=cfg,
+                           memory=MemorySpec(max_len=64)).fits_within(mx)
+    assert mx.heads_max == 4 and mx.d_model_max == 64
+    assert mx.layers_enc_max == 2 and mx.out_max == 128
+
+
+# ---------------------------------------------------------------------------
+# Construction-time rejection with actionable messages
+# ---------------------------------------------------------------------------
+def test_arch_rejects_nondividing_heads():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="not divisible"):
+        dataclasses.replace(cfg, d_model=65, head_dim=0)
+
+
+def test_arch_rejects_bad_kv_grouping():
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="divisor of num_heads"):
+        dataclasses.replace(cfg, num_heads=4, num_kv_heads=3)
+
+
+def test_memory_rejects_undersized_pool():
+    with pytest.raises(ValueError, match="never be admitted"):
+        MemorySpec(cache_layout="paged", max_len=64, block_size=8,
+                   num_blocks=7)
+    # exactly max_len of pool capacity is legal
+    MemorySpec(cache_layout="paged", max_len=64, block_size=8, num_blocks=8)
+
+
+def test_memory_rejects_nondividing_block_size():
+    with pytest.raises(ValueError, match="must divide"):
+        MemorySpec(cache_layout="paged", max_len=64, block_size=7)
+
+
+def test_execution_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="matmul_backend"):
+        ExecutionSpec(matmul_backend="cuda")
+    with pytest.raises(ValueError, match="cache_layout"):
+        MemorySpec(cache_layout="ring")
+
+
+def test_paged_spec_rejects_unpageable_family():
+    cfg = reduced_cfg("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="unsupported for family"):
+        RuntimeSpec(arch=cfg, memory=MemorySpec(cache_layout="paged",
+                                                max_len=64))
+
+
+def test_resolved_num_blocks_defaults_to_dense_worst_case():
+    mem = MemorySpec(cache_layout="paged", max_batch=4, max_len=64,
+                     block_size=8)
+    assert mem.resolved_num_blocks == 4 * 64 // 8
+    assert mem.paging().num_blocks == 32
+    assert MemorySpec().paging() is None
+
+
+def test_execution_dtypes_flow_to_model_options():
+    from repro.models.model import Model, ModelOptions
+    spec = RuntimeSpec(arch=reduced_cfg("qwen1.5-0.5b"),
+                       execution=ExecutionSpec(matmul_backend="pallas",
+                                               compute_dtype=jnp.float32))
+    model = Model.from_spec(spec)
+    assert isinstance(model.opt, ModelOptions)
+    assert model.opt.matmul_backend == "pallas"
+    assert model.opt.compute_dtype == jnp.float32
