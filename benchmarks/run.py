@@ -8,6 +8,7 @@
   fig11   — portability: tile re-planning across memory budgets
   fig12   — the 40-cell roofline table from the dry-run records
   fleet   — multi-topology serving vs per-model engines (equal memory)
+  serving — chunked prefill vs bucketed (TTFT / tok/s; BENCH_serving.json)
 """
 from __future__ import annotations
 
@@ -15,9 +16,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig5_tilesize, fig8_heads, fig11_portability,
-                        fig12_roofline, multi_topology, table1_throughput,
-                        table2_analytical)
+from benchmarks import (chunked_prefill, fig5_tilesize, fig8_heads,
+                        fig11_portability, fig12_roofline, multi_topology,
+                        table1_throughput, table2_analytical)
 
 
 def _fleet():
@@ -28,6 +29,23 @@ def _fleet():
     yield f"wall_s,{r['fleet_wall']:.2f},{r['solo_wall']:.2f}"
 
 
+def _serving():
+    r = chunked_prefill.run(arch="qwen1.5-0.5b", layers=1, max_batch=4,
+                            max_len=64, chunk=16, budget=32, max_new=4,
+                            require_speedup=None,
+                            out_json="BENCH_serving.json")
+    yield "metric,bucketed,chunked"
+    for key in ("ttft_short", "ttft_long"):
+        yield (f"{key}_warm,{r['results']['bucketed']['warm'][key]:.4f},"
+               f"{r['results']['chunked']['warm'][key]:.4f}")
+    yield ("drain_toks_per_s,"
+           f"{r['drain_toks_per_s']['bucketed']:.1f},"
+           f"{r['drain_toks_per_s']['chunked']:.1f}")
+    yield ("prefill_compilations,"
+           f"{r['compilations']['bucketed']['prefill']},"
+           f"{r['compilations']['chunked']['prefill']}")
+
+
 SECTIONS = [
     ("table1", table1_throughput.run),
     ("table2", table2_analytical.run),
@@ -36,6 +54,7 @@ SECTIONS = [
     ("fig11", fig11_portability.run),
     ("fig12", fig12_roofline.run),
     ("fleet", _fleet),
+    ("serving", _serving),
 ]
 
 

@@ -96,6 +96,30 @@ def masked_rmsnorm_slots(x: jax.Array, gamma: jax.Array,
     return (y * gamma.astype(jnp.float32)[:, None, :] * m).astype(x.dtype)
 
 
+def lane_mask(num_lanes: int, n_live: jax.Array) -> jax.Array:
+    """[B, W] bool: lane l of slot b is live iff l < n_live[b].
+
+    The chunked mixed step advances every slot by up to ``num_lanes``
+    query lanes per dispatch; a decoding slot uses one lane, a prefilling
+    slot up to a chunk, an idle slot none — dead lanes compute garbage
+    that is dropped at the KV write and the sampling gather.
+    """
+    return jnp.arange(num_lanes)[None, :] < n_live[:, None]
+
+
+def chunk_causal_mask(max_kv: int, start: jax.Array,
+                      num_lanes: int) -> jax.Array:
+    """[B, W, max_kv] bool: query lane l (cache position start[b] + l)
+    sees cache positions <= start[b] + l.
+
+    With chunk K/V written *before* the attend, this one mask covers both
+    halves of chunked prefill attention: causal intra-chunk masking and
+    the full view of the prior cache.
+    """
+    q_pos = start[:, None] + jnp.arange(num_lanes)[None, :]
+    return jnp.arange(max_kv)[None, None, :] <= q_pos[:, :, None]
+
+
 def masked_layernorm_slots(x: jax.Array, gamma: jax.Array, beta: jax.Array,
                            d_live: jax.Array,
                            eps: float = 1e-5) -> jax.Array:

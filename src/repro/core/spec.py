@@ -40,6 +40,12 @@ _MATMUL_BACKENDS = ("xla", "pallas")
 _PAGED_ATTN_IMPLS = ("gather", "pallas")
 _CACHE_LAYOUTS = ("dense", "paged")
 _QUANT_MODES = ("none", "int8")
+_SCHEDULER_POLICIES = ("auto", "chunked", "bucketed")
+
+# Families whose prefill can be replayed through the fused chunked step
+# (attention caches are write-then-attend; recurrent / rolling-window /
+# enc-dec state needs sequential prefill and stays on the bucketed path).
+CHUNKABLE_FAMILIES = ("dense", "vlm", "moe")
 
 
 @dataclass(frozen=True)
@@ -130,18 +136,86 @@ class MemorySpec:
 
 
 @dataclass(frozen=True)
+class SchedulerSpec:
+    """How the serving engine feeds work to the fused device step.
+
+    * ``policy="chunked"`` — prompts are split into fixed ``chunk_size``
+      chunks and fed through the *same* jitted step that decodes active
+      slots (a Sarathi-style mixed batch): prefill compilations drop to
+      O(1) and long prompts never stall decoding slots.  Requires an
+      attention-cache family (``CHUNKABLE_FAMILIES``) or fleet mode.
+    * ``policy="bucketed"`` — the legacy path: a separate B=1 prefill
+      dispatch per power-of-two prompt bucket.
+    * ``policy="auto"`` (default) — chunked wherever it is supported,
+      bucketed otherwise (and wherever ``chunk_size`` cannot satisfy the
+      block-geometry constraint below).
+
+    ``token_budget`` bounds the prompt tokens processed per fused step
+    across all slots (decode lanes ride along for free); ``None``
+    resolves to ``4 * chunk_size``.  In the paged layout ``chunk_size``
+    must be a whole number of blocks so chunk KV writes stay
+    block-aligned (the chunked-prefill kernel DMAs whole pool blocks).
+    """
+
+    policy: str = "auto"
+    chunk_size: int = 16
+    token_budget: int | None = None   # None -> 4 * chunk_size
+
+    def __post_init__(self) -> None:
+        if self.policy not in _SCHEDULER_POLICIES:
+            raise ValueError(
+                f"SchedulerSpec.policy={self.policy!r} is not one of "
+                f"{_SCHEDULER_POLICIES}")
+        if self.chunk_size <= 0:
+            raise ValueError(
+                f"SchedulerSpec.chunk_size must be positive, got "
+                f"{self.chunk_size}")
+        if self.token_budget is not None and \
+                self.token_budget < self.chunk_size:
+            raise ValueError(
+                f"SchedulerSpec.token_budget={self.token_budget} < "
+                f"chunk_size={self.chunk_size}: the scheduler could never "
+                "grant a full chunk; raise token_budget or shrink "
+                "chunk_size")
+
+    @property
+    def resolved_token_budget(self) -> int:
+        if self.token_budget is not None:
+            return self.token_budget
+        return 4 * self.chunk_size
+
+    def chunk_violations(self, memory: "MemorySpec") -> list[str]:
+        """Every way this scheduler cannot chunk against ``memory``'s
+        geometry (empty = the chunked policy is well-formed)."""
+        out = []
+        if self.chunk_size > memory.max_len:
+            out.append(
+                f"chunk_size={self.chunk_size} > max_len={memory.max_len} "
+                "(a chunk never exceeds the cache)")
+        if memory.cache_layout == "paged" and \
+                self.chunk_size % memory.block_size:
+            out.append(
+                f"chunk_size={self.chunk_size} is not a multiple of "
+                f"block_size={memory.block_size} (chunk KV writes must "
+                "stay block-aligned for the paged pool)")
+        return out
+
+
+@dataclass(frozen=True)
 class RuntimeSpec:
     """One frozen description of a runnable configuration.
 
     ``arch`` is *what* runs, ``maxima`` is the fabric it must fit (None =
     a dedicated fabric exactly ``arch``-sized), ``execution`` is how it
-    computes, ``memory`` is how its decode state is laid out.
+    computes, ``memory`` is how its decode state is laid out, and
+    ``scheduler`` is how the serving engine feeds it.
     """
 
     arch: ArchConfig
     maxima: Maxima | None = None
     execution: ExecutionSpec = field(default_factory=ExecutionSpec)
     memory: MemorySpec = field(default_factory=MemorySpec)
+    scheduler: SchedulerSpec = field(default_factory=SchedulerSpec)
 
     def __post_init__(self) -> None:
         self.validate()
@@ -158,6 +232,18 @@ class RuntimeSpec:
                 f"cache_layout='paged' is unsupported for family "
                 f"{cfg.family!r} (SSM / rolling-window / enc-dec decode "
                 "state is not paged); use cache_layout='dense'")
+        if self.scheduler.policy == "chunked":
+            # "auto" silently falls back to bucketed on these; an explicit
+            # chunked request fails loudly at construction instead
+            bad = self.scheduler.chunk_violations(self.memory)
+            if self.maxima is None and cfg.family not in CHUNKABLE_FAMILIES:
+                bad.append(
+                    f"family {cfg.family!r} has sequential prefill state "
+                    "(chunked prefill needs an attention KV cache)")
+            if bad:
+                raise ValueError(
+                    "scheduler policy 'chunked' is not satisfiable: "
+                    + "; ".join(bad))
         if self.maxima is not None:
             bad = self.violations(self.maxima)
             if bad:

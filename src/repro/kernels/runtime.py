@@ -1,0 +1,20 @@
+"""Runtime platform probes shared by the Pallas kernel call sites.
+
+``interpret_default()`` answers "must Pallas kernels run in interpret
+mode here?" exactly once per process: every fused serving step used to
+re-evaluate ``jax.default_backend() != "tpu"`` at call time (a dict
+lookup plus backend initialization check inside the hot dispatch path);
+the engine and fabric now read one cached value computed at
+construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def interpret_default() -> bool:
+    """True when Pallas TPU kernels need interpret mode (non-TPU hosts)."""
+    return jax.default_backend() != "tpu"

@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig
+from repro.core import masking
 from repro.core.paging import NULL_BLOCK
 from repro.distributed.sharding import constrain
+from repro.kernels.runtime import interpret_default
 from repro.models import layers
 from repro.models.layers import apply_rope, build_dense, apply_dense
 
@@ -80,8 +82,12 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
     if causal:
         s = jnp.where(_causal_mask(sq, k.shape[1], q_offset)[None, None], s, NEG_INF)
-    if kv_len_mask is not None:  # [B, Skv] live-position mask (decode / padding)
-        s = jnp.where(kv_len_mask[:, None, None, :], s, NEG_INF)
+    if kv_len_mask is not None:
+        # [B, Skv] live-position mask (decode / padding), or a per-lane
+        # [B, Sq, Skv] mask (the chunked mixed step's causal-vs-cache view)
+        m = kv_len_mask[:, None, None, :] if kv_len_mask.ndim == 2 \
+            else kv_len_mask[:, None, :, :]
+        s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
@@ -264,28 +270,31 @@ def as_index_vector(cache_index: jax.Array, batch: int) -> jax.Array:
 
 def _gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, live: jax.Array,
                 cfg: ArchConfig, grouped: bool) -> jax.Array:
-    """Decode-step score/value contraction over a [B, S, kv, hd] view.
+    """Decode/chunk score/value contraction over a [B, S, kv, hd] view.
 
-    Shared by the dense and paged layouts: both reduce to the same masked
-    attention once the cache has been (gathered into) sequence-major form,
-    which is what keeps the two layouts bit-identical.
+    ``live`` is [B, S] (one query lane per slot) or [B, W, S] (the mixed
+    step's per-lane causal-vs-cache masks).  Shared by the dense and
+    paged layouts: both reduce to the same masked attention once the
+    cache has been (gathered into) sequence-major form, which is what
+    keeps the two layouts bit-identical.
     """
-    b_, one = q.shape[:2]
+    b_, nq = q.shape[:2]
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     n_rep = h // max(kv, 1)
     if grouped:
         # GQA-grouped contraction: the KV cache is used directly, never
         # materialized at h heads (repeat_kv costs ~2x cache bytes/layer)
-        qg = q.reshape(b_, one, kv, n_rep, hd)
+        lv = live[:, None, :] if live.ndim == 2 else live      # [B, W, S]
+        qg = q.reshape(b_, nq, kv, n_rep, hd)
         s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
         s = s / math.sqrt(hd)
-        s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
+        s = jnp.where(lv[:, None, None, :, :], s, NEG_INF)
         pr = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bkrqs,bskd->bqkrd", pr.astype(v.dtype), v)
-        return o.reshape(b_, one, h * hd)
+        return o.reshape(b_, nq, h * hd)
     kf, vf = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
     o = full_attention(q, kf, vf, causal=False, kv_len_mask=live)
-    return o.reshape(b_, one, h * hd)
+    return o.reshape(b_, nq, h * hd)
 
 
 def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
@@ -321,14 +330,18 @@ def paged_write_slot(idx_vec: jax.Array, block_tables: jax.Array,
                      block_size: int) -> tuple[jax.Array, jax.Array]:
     """(physical block, in-block offset) for each slot's next cache write.
 
-    A slot whose index has run past the addressable range (cache full,
-    slot finished but not yet harvested) is routed to the null block, so
-    the fused decode step stays safe with zero host intervention.
+    ``idx_vec`` is [B] (one write per slot) or [B, W] (the mixed step's
+    chunk lanes).  An index past the addressable range (cache full, slot
+    finished but not yet harvested, dead chunk lane) is routed to the
+    null block, so the fused step stays safe with zero host intervention.
     """
     t_max = block_tables.shape[1] * block_size
     safe = jnp.minimum(idx_vec, t_max - 1)
-    blk = jnp.take_along_axis(block_tables, (safe // block_size)[:, None],
-                              axis=1)[:, 0]
+    if idx_vec.ndim == 1:
+        blk = jnp.take_along_axis(block_tables, (safe // block_size)[:, None],
+                                  axis=1)[:, 0]
+    else:
+        blk = jnp.take_along_axis(block_tables, safe // block_size, axis=1)
     blk = jnp.where(idx_vec < t_max, blk, NULL_BLOCK)
     return blk, safe % block_size
 
@@ -358,12 +371,84 @@ def gqa_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
         lengths = jnp.minimum(idx_vec + 1, t_max)
         o = paged_decode_attention(
             q[:, 0], k, v, block_tables, lengths,
-            interpret=jax.default_backend() != "tpu")
+            interpret=interpret_default())
         o = o.reshape(b_, one, cfg.num_heads * hd)
     else:
         kg = k[block_tables].reshape(b_, t_max, kv, hd)
         vg = v[block_tables].reshape(b_, t_max, kv, hd)
         live = jnp.arange(t_max)[None, :] <= idx_vec[:, None]
+        o = _gqa_attend(q, kg, vg, live, cfg, grouped)
+    return apply_dense(o, p["wo"]), KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# Mixed chunk/decode step — chunked prefill fused with decode
+# ---------------------------------------------------------------------------
+def gqa_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
+              start: jax.Array, n_live: jax.Array, *,
+              grouped: bool = False) -> tuple[jax.Array, KVCache]:
+    """W-lane chunk/decode attention against the dense [B, S_max] cache.
+
+    ``x`` is [B, W, d]: lane ``l`` of slot ``b`` sits at cache position
+    ``start[b] + l``; only the first ``n_live[b]`` lanes are real (a
+    decoding slot uses one, a prefilling slot up to a chunk, an idle slot
+    none).  Chunk K/V are written *before* the attend, so one
+    causal-vs-cache mask covers intra-chunk causality and the prior
+    cache — the math reduces exactly to ``gqa_decode`` at W == 1, and
+    replaying a prompt chunk-by-chunk reproduces ``gqa_prefill``'s
+    logits bit-for-bit below ``BLOCKWISE_THRESHOLD`` (above it bucketed
+    prefill switches to the streaming softmax, whose accumulation order
+    this unfused path does not mirror).
+    """
+    b_, w, _ = x.shape
+    positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = gqa_qkv(x, p, cfg, positions)
+    s_max = cache.k.shape[1]
+    # dead lanes scatter out of bounds; jax drops those updates, so no
+    # lane ever collides with a live write
+    pos = jnp.where(masking.lane_mask(w, n_live), positions, s_max)
+    rows = jnp.arange(b_)[:, None]
+    k = cache.k.at[rows, pos].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[rows, pos].set(v_new.astype(cache.v.dtype))
+    live = masking.chunk_causal_mask(s_max, start, w)
+    o = _gqa_attend(q, k, v, live, cfg, grouped)
+    return apply_dense(o, p["wo"]), KVCache(k, v)
+
+
+def gqa_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
+                    start: jax.Array, n_live: jax.Array,
+                    block_tables: jax.Array, *, grouped: bool = False,
+                    impl: str = "gather",
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, KVCache]:
+    """W-lane chunk/decode attention against the pooled block cache.
+
+    ``impl="gather"`` materializes the block-table view and reuses the
+    dense contraction (bit-identical to ``gqa_mixed``); ``"pallas"``
+    streams pool blocks through the fused chunked-prefill kernel.
+    """
+    b_, w, _ = x.shape
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    bs = cache.k.shape[1]
+    positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = gqa_qkv(x, p, cfg, positions)
+    t_max = block_tables.shape[1] * bs
+    # dead lanes -> index t_max -> the null block absorbs them
+    idx_w = jnp.where(masking.lane_mask(w, n_live), positions, t_max)
+    blk, off = paged_write_slot(idx_w, block_tables, bs)
+    k = cache.k.at[blk, off].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[blk, off].set(v_new.astype(cache.v.dtype))
+    if impl == "pallas":
+        from repro.kernels.chunked_prefill import chunked_prefill_attention
+        if interpret is None:
+            interpret = interpret_default()
+        o = chunked_prefill_attention(q, k, v, block_tables, start,
+                                      interpret=interpret)
+        o = o.reshape(b_, w, cfg.num_heads * hd)
+    else:
+        kg = k[block_tables].reshape(b_, t_max, kv, hd)
+        vg = v[block_tables].reshape(b_, t_max, kv, hd)
+        live = masking.chunk_causal_mask(t_max, start, w)
         o = _gqa_attend(q, kg, vg, live, cfg, grouped)
     return apply_dense(o, p["wo"]), KVCache(k, v)
 
@@ -500,5 +585,47 @@ def mla_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
     ckv_g = c_kv[block_tables].reshape(b_, t_max, m.kv_lora_rank)
     kr_g = k_rope[block_tables].reshape(b_, t_max, m.qk_rope_head_dim)
     live = (jnp.arange(t_max)[None] <= idx_vec[:, None])[:, None, None, :]
+    out = _mla_attend(x, p, cfg, q_nope, q_rope, ckv_g, kr_g, live)
+    return out, MLACache(c_kv, k_rope)
+
+
+def mla_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
+              start: jax.Array, n_live: jax.Array
+              ) -> tuple[jax.Array, MLACache]:
+    """W-lane chunk/decode MLA against the dense latent cache (absorbed
+    contraction; see ``gqa_mixed`` for the lane protocol)."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, w, _ = x.shape
+    positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
+    c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    s_max = cache.c_kv.shape[1]
+    pos = jnp.where(masking.lane_mask(w, n_live), positions, s_max)
+    rows = jnp.arange(b_)[:, None]
+    c_kv = cache.c_kv.at[rows, pos].set(c_new.astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[rows, pos].set(kr_new.astype(cache.k_rope.dtype))
+    live = masking.chunk_causal_mask(s_max, start, w)[:, None]  # [B,1,W,S]
+    out = _mla_attend(x, p, cfg, q_nope, q_rope, c_kv, k_rope, live)
+    return out, MLACache(c_kv, k_rope)
+
+
+def mla_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
+                    start: jax.Array, n_live: jax.Array,
+                    block_tables: jax.Array) -> tuple[jax.Array, MLACache]:
+    """W-lane chunk/decode MLA against the pooled latent block cache."""
+    m, h = cfg.mla, cfg.num_heads
+    b_, w, _ = x.shape
+    bs = cache.c_kv.shape[1]
+    positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
+    c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
+    t_max = block_tables.shape[1] * bs
+    idx_w = jnp.where(masking.lane_mask(w, n_live), positions, t_max)
+    blk, off = paged_write_slot(idx_w, block_tables, bs)
+    c_kv = cache.c_kv.at[blk, off].set(c_new.astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[blk, off].set(kr_new.astype(cache.k_rope.dtype))
+    ckv_g = c_kv[block_tables].reshape(b_, t_max, m.kv_lora_rank)
+    kr_g = k_rope[block_tables].reshape(b_, t_max, m.qk_rope_head_dim)
+    live = masking.chunk_causal_mask(t_max, start, w)[:, None]
     out = _mla_attend(x, p, cfg, q_nope, q_rope, ckv_g, kr_g, live)
     return out, MLACache(c_kv, k_rope)

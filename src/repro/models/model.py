@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.paging import PagingConfig
+from repro.core.spec import CHUNKABLE_FAMILIES
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import backend
@@ -266,6 +267,29 @@ class Model:
             x, c = body(x, jax.tree.map(lambda l: l[i], stacked))
             outs.append(c)
         return x, jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+
+    def _run_prefix_then_stack(self, body, x, params, cache):
+        """Cache-threading layer loop with the MoE dense prefix: the
+        unrolled prefix layers hold their own cache slices at the front
+        of the stacked cache, the scanned main stack follows, and the
+        prefix caches are re-stacked on the way out.  Shared by
+        ``decode_step`` and ``mixed_step`` (all attention variants)."""
+        prefix = params.get("dense_prefix", [])
+        if not prefix:
+            return self._run_stack_cache(body, x, params["layers"], cache)
+        npref = len(prefix)
+        pref_cache = jax.tree.map(lambda l: l[:npref], cache)
+        main_cache = jax.tree.map(lambda l: l[npref:], cache)
+        new_pref = []
+        for i, lp in enumerate(prefix):
+            ci = jax.tree.map(lambda l: l[i], pref_cache)
+            x, c2 = body(x, (lp, ci))
+            new_pref.append(c2)
+        x, new_main = self._run_stack_cache(body, x, params["layers"],
+                                            main_cache)
+        stacked_pref = jax.tree.map(lambda *ls: jnp.stack(ls), *new_pref)
+        return x, jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                               stacked_pref, new_main)
 
     def _dense_body(self, x, lp, positions, causal, window=None):
         cfg = self.cfg
@@ -675,23 +699,8 @@ class Model:
                     h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
                 return h, c2
             # dense prefix layers hold their own caches at the front
-            npref = len(params.get("dense_prefix", []))
-            pref_cache = jax.tree.map(lambda l: l[:npref], cache)
-            main_cache = jax.tree.map(lambda l: l[npref:], cache)
-            new_pref = []
-            for i, lp in enumerate(params.get("dense_prefix", [])):
-                ci = jax.tree.map(lambda l: l[i], pref_cache)
-                x, c2 = body(x, (lp, ci))
-                new_pref.append(c2)
-            x, new_main = self._run_stack_cache(body, x, params["layers"],
-                                                main_cache)
-            if new_pref:
-                stacked_pref = jax.tree.map(
-                    lambda *ls: jnp.stack(ls), *new_pref)
-                new_cache = jax.tree.map(
-                    lambda a, b_: jnp.concatenate([a, b_]), stacked_pref, new_main)
-            else:
-                new_cache = new_main
+            x, new_cache = self._run_prefix_then_stack(body, x, params,
+                                                       cache)
         elif cfg.family == "hybrid":
             new_cache = []
             for lp, kind, st in zip(params["layers"], self._hybrid_kinds(), cache):
@@ -741,22 +750,87 @@ class Model:
                 else:
                     h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
                 return h, c2
-            npref = len(params.get("dense_prefix", []))
-            if npref:
-                pref_cache = jax.tree.map(lambda l: l[:npref], cache)
-                main_cache = jax.tree.map(lambda l: l[npref:], cache)
-                new_pref = []
-                for i, lp in enumerate(params["dense_prefix"]):
-                    ci = jax.tree.map(lambda l: l[i], pref_cache)
-                    x, c2 = body(x, (lp, ci))
-                    new_pref.append(c2)
-                x, new_main = self._run_stack_cache(body, x, params["layers"],
-                                                main_cache)
-                stacked_pref = jax.tree.map(lambda *ls: jnp.stack(ls), *new_pref)
-                new_cache = jax.tree.map(
-                    lambda a, b_: jnp.concatenate([a, b_]), stacked_pref, new_main)
-            else:
-                x, new_cache = self._run_stack_cache(body, x, params["layers"], cache)
+            x, new_cache = self._run_prefix_then_stack(body, x, params,
+                                                       cache)
+        return self._unembed(params, x), new_cache
+
+    @_with_backend
+    def mixed_step(self, params: dict, cache, tokens: jax.Array,
+                   start: jax.Array, n_live: jax.Array,
+                   block_tables: jax.Array | None = None,
+                   prefill_lanes: jax.Array | None = None):
+        """Chunked-prefill/decode mixed step: tokens [B, W] -> (logits
+        [B, W, vocab], new cache).
+
+        Lane ``l`` of slot ``b`` sits at cache position ``start[b] + l``;
+        only the first ``n_live[b]`` lanes are real.  A decoding slot uses
+        one lane (its next token), a prefilling slot up to a chunk of
+        prompt tokens, an idle slot none — one compiled step serves any
+        mixture, so prefill stops being a separate per-bucket dispatch.
+        ``prefill_lanes`` ([B] bool) marks slots whose lanes are prompt
+        tokens (only consulted by the vlm frontend stub).  Restricted to
+        attention-cache families: recurrent / rolling-window / enc-dec
+        prefill state is sequential and stays on the bucketed path.
+        """
+        cfg = self.cfg
+        if cfg.family not in CHUNKABLE_FAMILIES:
+            raise ValueError(
+                f"mixed_step unsupported for family {cfg.family!r} "
+                "(sequential prefill state); use the bucketed scheduler")
+        b_, w = tokens.shape
+        start = attn.as_index_vector(start, b_)
+        positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        x = layers.embed(tokens, params["embed"], self.opt.compute_dtype)
+        if cfg.positional == "learned":
+            idx = jnp.minimum(positions, cfg.max_position_embeddings - 1)
+            x = x + params["pos_embed"]["table"].astype(x.dtype)[idx]
+        if cfg.frontend is not None and prefill_lanes is not None:
+            # parity with the stub vision frontend of prefill: prompt
+            # positions < num_tokens carry the (zero-stub) patch
+            # embeddings instead of token embeddings
+            fm = prefill_lanes[:, None, None] \
+                & (positions < cfg.frontend.num_tokens)[..., None]
+            x = jnp.where(fm, jnp.zeros_like(x), x)
+
+        if cfg.mla is not None:
+            def body(h, inp):
+                lp, c = inp
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                if block_tables is not None:
+                    o, c2 = attn.mla_mixed_paged(hn, lp["attn"], cfg, c,
+                                                 start, n_live, block_tables)
+                else:
+                    o, c2 = attn.mla_mixed(hn, lp["attn"], cfg, c,
+                                           start, n_live)
+                h = h + o
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                if "moe" in lp:
+                    h = h + moe.apply_moe(hn, lp["moe"], cfg)
+                else:
+                    h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                return h, c2
+        else:
+            def body(h, inp):
+                lp, c = inp
+                hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
+                if block_tables is not None:
+                    o, c2 = attn.gqa_mixed_paged(
+                        hn, lp["attn"], cfg, c, start, n_live, block_tables,
+                        grouped=self.opt.grouped_gqa,
+                        impl=self.opt.paged_attn_impl)
+                else:
+                    o, c2 = attn.gqa_mixed(hn, lp["attn"], cfg, c,
+                                           start, n_live,
+                                           grouped=self.opt.grouped_gqa)
+                h = h + o
+                hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
+                if "moe" in lp:
+                    h = h + moe.apply_moe(hn, lp["moe"], cfg)
+                else:
+                    h = h + moe.apply_ffn(hn, lp["ffn"], cfg.activation)
+                return h, c2
+
+        x, new_cache = self._run_prefix_then_stack(body, x, params, cache)
         return self._unembed(params, x), new_cache
 
 

@@ -2,16 +2,24 @@
 
 Compile-once discipline (the paper's Alg. 18 applied to serving):
 
-* ``prefill_fn``  — compiled per prompt-length *bucket* (powers of two up
-  to max_len): a new request is padded up to its bucket, prefilled at
-  B=1, and its cache is scattered into the shared batched cache.
-  Buckets bound the number of compilations the way the paper's maxima
-  bound the fabric.
-* ``decode_fn``   — compiled exactly once, and *fused*: model decode,
-  per-slot sampling (temperature / top-k / top-p as device data, never
-  trace constants), per-slot index/budget/eos bookkeeping and the
-  generated-token scatter all run in a single jitted step.  Idle slots
-  compute masked garbage (idle PEs) that never reaches a live output.
+* **chunked scheduler** (default wherever the family supports it) — ONE
+  fused mixed step, compiled exactly once, does everything: prompts are
+  split into fixed ``chunk_size`` chunks and up to ``token_budget``
+  prompt tokens ride *inside the same jitted step* that decodes active
+  slots (a Sarathi-style mixed batch).  Every slot advances by up to W =
+  chunk_size query lanes per dispatch — a decoding slot uses one lane, a
+  prefilling slot a chunk of its prompt (gathered on device from
+  ``SlotState.prompt_buf``), an idle slot none.  Prefill compilations
+  drop from O(#buckets x modes) to O(1) and a long prompt never stalls
+  the decoding slots sharing its batch.  The cache and ``SlotState`` are
+  donated to the step (``donate_argnums``), so XLA updates the KV pool
+  in place instead of copying it every token.
+* **bucketed scheduler** (legacy; families with sequential prefill
+  state) — ``prefill_fn`` compiled per prompt-length *bucket* (powers of
+  two up to max_len): a new request is padded up to its bucket,
+  prefilled at B=1, and its cache is scattered into the shared batched
+  cache; ``decode_fn`` is the one-lane fused step.  Idle slots compute
+  masked garbage (idle PEs) that never reaches a live output.
 
 Host↔device discipline (the paper's "no host intervention beyond the
 topology registers"): **all** per-slot state lives in device arrays
@@ -62,7 +70,9 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
                                blocks_for_tokens)
-from repro.core.spec import ExecutionSpec, MemorySpec, RuntimeSpec
+from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
+                             RuntimeSpec)
+from repro.kernels.runtime import interpret_default
 from repro.models import backend
 from repro.models.model import Model
 from repro.serving.fabric import N_REGS, DecodeFabric
@@ -91,7 +101,7 @@ class SlotState(NamedTuple):
 
     last: jax.Array    # [B, 1] i32  token fed to the next decode step
     index: jax.Array   # [B]    i32  cache write position
-    active: jax.Array  # [B]    bool slot is decoding
+    active: jax.Array  # [B]    bool slot is live (prefilling or decoding)
     done: jax.Array    # [B]    bool finished, not yet harvested/reused
     budget: jax.Array  # [B]    i32  max_new_tokens (incl. prefill token)
     count: jax.Array   # [B]    i32  tokens generated so far
@@ -102,6 +112,19 @@ class SlotState(NamedTuple):
     buf: jax.Array     # [B, max_len] i32 generated tokens
     rng: jax.Array     # PRNG key threaded through the fused step
     topo: jax.Array    # [B, N_REGS] i32 per-slot topology registers
+    # chunked-prefill progress (the token-budget scheduler's device side)
+    prompt_buf: jax.Array  # [B, max_len] i32 prompt tokens, chunk source
+    prompt_len: jax.Array  # [B] i32 total prompt length
+    pf_pos: jax.Array      # [B] i32 prompt tokens already written to cache
+
+
+class _Compilations(dict):
+    """Compile-count mapping that is also callable: both the historical
+    ``engine.compilations["decode"]`` property spelling and the newer
+    ``engine.compilations()["prefill"]`` read the same accounting."""
+
+    def __call__(self) -> "_Compilations":
+        return self
 
 
 def _buckets(max_len: int, smallest: int = 32) -> list[int]:
@@ -200,6 +223,23 @@ class ServingEngine:
         self.sampling = sampling
         self.buckets = _buckets(self.max_len)
         self.matmul_backend = spec.execution.matmul_backend
+        # Pallas kernels need interpret mode off-TPU; evaluated once here
+        # instead of on every fused dispatch
+        self._interpret = interpret_default()
+
+        # ---- scheduler: chunked (token-budget) or bucketed ---------------
+        sched = spec.scheduler
+        chunkable = (spec.maxima is not None
+                     or cfg.family in CHUNKABLE_FAMILIES) \
+            and not sched.chunk_violations(spec.memory)
+        if sched.policy == "auto":
+            self.scheduler = "chunked" if chunkable else "bucketed"
+        else:
+            # an unsatisfiable explicit "chunked" was rejected by
+            # RuntimeSpec.validate at construction
+            self.scheduler = sched.policy
+        self.chunk_size = min(sched.chunk_size, self.max_len)
+        self.token_budget = sched.resolved_token_budget
 
         # ---- compute path: one fixed model, or the register fabric -------
         if spec.maxima is not None:
@@ -269,6 +309,9 @@ class ServingEngine:
         self._idx_ub = [0] * max_batch
         self._admit_seq = [0] * max_batch
         self._seq = 0
+        # chunked-prefill progress mirror: exact, because the host grants
+        # every chunk itself — no device read needed
+        self._pf = [0] * max_batch
 
         self.params: Any = None
         self.cache: Any = None
@@ -287,14 +330,19 @@ class ServingEngine:
         # harvest_elems counts i32 elements pulled for finished buffers —
         # bounded by the finished streams' lengths, not max_len
         self.stats = {"decode_steps": 0, "device_gets": 0,
-                      "harvest_elems": 0, "preemptions": 0}
+                      "harvest_elems": 0, "preemptions": 0,
+                      "prefill_tokens": 0, "max_step_prefill_tokens": 0}
 
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill = {}        # bucket -> jitted fn
+        # the cache and SlotState are donated: XLA aliases the KV pool and
+        # the slot buffers in place of copying them on every fused step
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1, 2))
+        self._step = jax.jit(self._mixed_impl, donate_argnums=(1, 2))
+        self._prefill = {}        # bucket -> jitted fn (bucketed path)
         self._insert = jax.jit(self._insert_impl, static_argnums=(3,))
         self._insert_paged = jax.jit(self._insert_paged_impl,
                                      static_argnums=(3,))
         self._admit_slot = jax.jit(self._admit_slot_impl)
+        self._admit_chunk = jax.jit(self._admit_chunk_impl)
         self._evict_slot = jax.jit(self._evict_slot_impl)
 
     # ------------------------------------------------------------------
@@ -313,7 +361,10 @@ class ServingEngine:
             top_p=jnp.ones((B,), jnp.float32),
             buf=jnp.zeros((B, self.max_len), jnp.int32),
             rng=rng,
-            topo=jnp.zeros((B, N_REGS), jnp.int32))
+            topo=jnp.zeros((B, N_REGS), jnp.int32),
+            prompt_buf=jnp.zeros((B, self.max_len), jnp.int32),
+            prompt_len=jnp.zeros((B,), jnp.int32),
+            pf_pos=jnp.zeros((B,), jnp.int32))
 
     def load(self, params) -> None:
         """Install weights (quantized here when ``spec.execution.quant``
@@ -363,6 +414,9 @@ class ServingEngine:
         # mirrors the decode finish condition (index >= max_len): every
         # admitted request can use the full cache, so a max_len prompt is
         # fine when its one token comes from the prefill sample.
+        if not prompt:
+            raise ValueError("empty prompt: the engine needs at least one "
+                             "token to condition on")
         if len(prompt) > self.max_len:
             raise ValueError(f"prompt length {len(prompt)} exceeds "
                              f"max_len={self.max_len}")
@@ -465,7 +519,34 @@ class ServingEngine:
             top_p=state.top_p.at[slot].set(top_p),
             buf=state.buf.at[slot].set(0).at[slot, 0].set(first),
             rng=rng,
-            topo=state.topo.at[slot].set(topo))
+            topo=state.topo.at[slot].set(topo),
+            prompt_buf=state.prompt_buf,
+            prompt_len=state.prompt_len.at[slot].set(plen),
+            pf_pos=state.pf_pos.at[slot].set(plen))  # bucketed: prefilled
+
+    def _admit_chunk_impl(self, state: SlotState, slot, toks, plen, budget,
+                          eos, temp, top_k, top_p, topo) -> SlotState:
+        """Seat one request for chunked prefill: write its prompt into the
+        device-resident chunk source and reset every per-slot field — the
+        prompt is *not* run here; the fused mixed step consumes it chunk
+        by chunk under the token budget."""
+        return SlotState(
+            last=state.last.at[slot, 0].set(0),
+            index=state.index.at[slot].set(0),
+            active=state.active.at[slot].set(True),
+            done=state.done.at[slot].set(False),
+            budget=state.budget.at[slot].set(budget),
+            count=state.count.at[slot].set(0),
+            eos=state.eos.at[slot].set(eos),
+            temp=state.temp.at[slot].set(temp),
+            top_k=state.top_k.at[slot].set(top_k),
+            top_p=state.top_p.at[slot].set(top_p),
+            buf=state.buf.at[slot].set(0),
+            rng=state.rng,
+            topo=state.topo.at[slot].set(topo),
+            prompt_buf=state.prompt_buf.at[slot].set(toks),
+            prompt_len=state.prompt_len.at[slot].set(plen),
+            pf_pos=state.pf_pos.at[slot].set(0))
 
     def _evict_slot_impl(self, state: SlotState, slot) -> SlotState:
         """Preemption: park a slot as idle (its tokens were banked on the
@@ -474,7 +555,9 @@ class ServingEngine:
             active=state.active.at[slot].set(False),
             done=state.done.at[slot].set(False),
             count=state.count.at[slot].set(0),
-            index=state.index.at[slot].set(0))
+            index=state.index.at[slot].set(0),
+            prompt_len=state.prompt_len.at[slot].set(0),
+            pf_pos=state.pf_pos.at[slot].set(0))
 
     def _decode_impl(self, params, cache, state: SlotState, block_tables):
         """The fused device step: decode -> sample -> scatter token ->
@@ -487,7 +570,7 @@ class ServingEngine:
                     params, cache, state.last, state.index, state.topo,
                     block_tables=block_tables,
                     paged_attn_impl=self.spec.execution.paged_attn_impl,
-                    interpret=jax.default_backend() != "tpu")
+                    interpret=self._interpret)
             else:
                 logits, cache = self._traced_model.decode_step(
                     params, cache, state.last, state.index,
@@ -518,10 +601,81 @@ class ServingEngine:
                 rng=rng)
             return cache, state
 
+    def _mixed_impl(self, params, cache, state: SlotState, block_tables,
+                    chunk_len):
+        """THE fused step of the chunked scheduler: one dispatch advances
+        every slot by up to W = chunk_size lanes — prompt chunks for
+        prefilling slots (``chunk_len[b]`` > 0, tokens gathered on device
+        from ``prompt_buf``), the next decode token for decoding slots,
+        nothing for idle ones — then samples, scatters tokens and
+        advances indices/budgets/eos flags.  Zero host syncs; chunk
+        grants are data, so this traces exactly once."""
+        with backend.use(self.matmul_backend):
+            B, W = self.max_batch, self.chunk_size
+            rng, k = jax.random.split(state.rng)
+            prefilling = chunk_len > 0
+            decoding = state.active & (state.pf_pos >= state.prompt_len)
+            n_live = jnp.where(prefilling, chunk_len,
+                               jnp.where(decoding, 1, 0))
+            start = jnp.where(prefilling, state.pf_pos, state.index)
+            # lane tokens: the slot's next prompt window, or its last
+            # sampled token in lane 0 (dead lanes carry garbage that the
+            # lane masks drop)
+            gidx = jnp.minimum(
+                start[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :],
+                self.max_len - 1)
+            ptoks = jnp.take_along_axis(state.prompt_buf, gidx, axis=1)
+            dtoks = jnp.pad(state.last, ((0, 0), (0, W - 1)))
+            toks = jnp.where(prefilling[:, None], ptoks, dtoks)
+            if self.fabric is not None:
+                logits, cache = self.fabric.mixed_step(
+                    params, cache, toks, start, n_live, state.topo,
+                    block_tables=block_tables,
+                    paged_attn_impl=self.spec.execution.paged_attn_impl,
+                    interpret=self._interpret)
+            else:
+                logits, cache = self._traced_model.mixed_step(
+                    params, cache, toks, start, n_live,
+                    block_tables=block_tables, prefill_lanes=prefilling)
+
+            # sampling lane: a completing prompt's last live lane, else 0
+            completes = prefilling & \
+                (state.pf_pos + chunk_len >= state.prompt_len)
+            sel = jnp.where(completes, chunk_len - 1, 0)
+            lsel = jnp.take_along_axis(logits, sel[:, None, None],
+                                       axis=1)[:, 0]
+            toks_s = sample_per_slot(lsel, k, state.temp, state.top_k,
+                                     state.top_p)
+
+            emit = decoding | completes   # slots producing a token now
+            rows = jnp.arange(B)
+            pos = jnp.minimum(state.count, self.max_len - 1)
+            buf = state.buf.at[rows, pos].set(
+                jnp.where(emit, toks_s, state.buf[rows, pos]))
+            count = state.count + emit.astype(jnp.int32)
+            index = state.index + n_live
+            pf_pos = state.pf_pos + jnp.where(prefilling, chunk_len, 0)
+            hit_eos = emit & (state.eos >= 0) & (toks_s == state.eos)
+            finish = emit & (hit_eos | (count >= state.budget)
+                             | (index >= self.max_len))
+            state = state._replace(
+                last=jnp.where(emit[:, None], toks_s[:, None], state.last),
+                index=index,
+                active=state.active & ~finish,
+                done=state.done | finish,
+                count=count,
+                buf=buf,
+                rng=rng,
+                pf_pos=pf_pos)
+            return cache, state
+
     # ------------------------------------------------------------------
     # host-side control (dispatch-only between syncs)
     # ------------------------------------------------------------------
     def _admit(self) -> None:
+        if self.scheduler == "chunked":
+            self._admit_chunked()
+            return
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
@@ -588,8 +742,80 @@ class ServingEngine:
             self._plen[slot] = plen
             self._budget[slot] = budget
             self._idx_ub[slot] = plen
+            self._pf[slot] = plen
             self._seq += 1
             self._admit_seq[slot] = self._seq
+
+    def _admit_chunked(self) -> None:
+        """Token-budget admission: seat a request by *writing its prompt*
+        into the device-resident chunk source — no prefill dispatch, no
+        bucket compile.  The fused mixed step earns its first token once
+        the scheduler has granted all its chunks."""
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            prompt = req.prompt + req.prefix
+            plen = len(prompt)
+            budget = req.max_new_tokens - len(req.prefix)
+            if self.paging is not None:
+                blocks = self.allocator.alloc(blocks_for_tokens(
+                    plen, self.paging.block_size))
+                if blocks is None:
+                    break   # FCFS: the queue head waits for blocks
+                self._slot_blocks[slot] = blocks
+                row = blocks + [NULL_BLOCK] * (self.blocks_per_slot
+                                               - len(blocks))
+                self._tables[slot] = row
+                self._tables_dirty = True
+            self.queue.pop(0)
+            toks = jnp.asarray(prompt + [0] * (self.max_len - plen),
+                               jnp.int32)
+            topo_row = jnp.zeros((N_REGS,), jnp.int32)
+            if self.fabric is not None:
+                topo_row = jnp.asarray(self._fleet_rows[req.model], jnp.int32)
+            sp = req.sampling or self.sampling
+            temp, top_k, top_p = sp.as_arrays()
+            self.state = self._admit_chunk(
+                self.state, jnp.int32(slot), toks, jnp.int32(plen),
+                jnp.int32(budget),
+                jnp.int32(-1 if req.eos_id is None else req.eos_id),
+                temp, top_k, top_p, topo_row)
+            req.slot = slot
+            self.slot_req[slot] = req
+            self._plen[slot] = plen
+            self._budget[slot] = budget
+            self._idx_ub[slot] = 0
+            self._pf[slot] = 0
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
+
+    def _grant_chunks(self) -> list[int]:
+        """The token-budget scheduler: up to ``token_budget`` prompt
+        tokens per fused step, at most ``chunk_size`` per slot, split
+        fairly across the prefilling slots (decode lanes ride along for
+        free).  The fair share is what kills head-of-line blocking: a
+        long prompt cannot monopolize the budget, so a short prompt
+        admitted beside it still completes its prefill in one or two
+        steps.  Leftover budget goes FCFS by admission order.  Pure host
+        arithmetic over exact mirrors — no device read."""
+        grants = [0] * self.max_batch
+        order = [s for s in sorted(self._occupied(),
+                                   key=lambda t: self._admit_seq[t])
+                 if self._pf[s] < self._plen[s]]
+        if not order:
+            return grants
+        share = max(min(self.token_budget // len(order), self.chunk_size), 1)
+        left = self.token_budget
+        for cap in (share, self.chunk_size):   # fair pass, then leftovers
+            for slot in order:
+                rem = self._plen[slot] - self._pf[slot] - grants[slot]
+                g = min(cap - grants[slot], rem, left)
+                if g <= 0:
+                    continue
+                grants[slot] += g
+                left -= g
+        return grants
 
     def _occupied(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -611,8 +837,15 @@ class ServingEngine:
                            key=lambda s: self._admit_seq[s]):
             if self.slot_req[slot] is None:   # preempted by an earlier turn
                 continue
-            need_tokens = min(self._idx_ub[slot] + horizon,
-                              self._slot_token_cap(slot))
+            if self._pf[slot] < self._plen[slot]:
+                # a mid-prefill slot owns its prompt's blocks already; it
+                # needs >= 1 step to finish the prompt, so it can write at
+                # most horizon - 1 decode tokens on top within the window
+                need_tokens = min(self._plen[slot] + horizon - 1,
+                                  self._slot_token_cap(slot))
+            else:
+                need_tokens = min(self._idx_ub[slot] + horizon,
+                                  self._slot_token_cap(slot))
             missing = blocks_for_tokens(need_tokens, bs) \
                 - len(self._slot_blocks[slot])
             while missing > 0:
@@ -643,8 +876,10 @@ class ServingEngine:
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: bank the slot's generated tokens, free its
         blocks, and push the request back to the queue head — it resumes
-        by prefilling prompt+banked tokens (greedy streams are unchanged;
-        the request keeps its uid and budget)."""
+        by re-entering the scheduler with prompt+banked tokens (greedy
+        streams are unchanged; the request keeps its uid and budget).  A
+        slot preempted *mid-prefill* has banked nothing and simply
+        restarts its chunk sequence from the prompt head."""
         req = self.slot_req[slot]
         cnt = int(jax.device_get(self.state.count[slot]))
         self.stats["device_gets"] += 1
@@ -654,8 +889,10 @@ class ServingEngine:
             self.stats["harvest_elems"] += cnt
             req.prefix = req.prefix + [int(t) for t in toks]
         self.state = self._evict_slot(self.state, jnp.int32(slot))
-        self._release_slot_blocks(slot)
+        if self.paging is not None:
+            self._release_slot_blocks(slot)
         self.slot_req[slot] = None
+        self._pf[slot] = 0
         req.slot = None
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
@@ -664,6 +901,32 @@ class ServingEngine:
         if self.paging is not None and self._tables_dirty:
             self.block_tables = jnp.asarray(self._tables, jnp.int32)
             self._tables_dirty = False
+        if self.scheduler == "chunked":
+            grants = self._grant_chunks()
+            granted = sum(grants)
+            if granted:
+                self.cache, self.state = self._step(
+                    self.params, self.cache, self.state, self.block_tables,
+                    jnp.asarray(grants, jnp.int32))
+            else:
+                # steady state (no prompt work anywhere): the one-lane
+                # fused decode is the W == 1 special case of the mixed
+                # step — same math, same rng schedule, ~chunk_size x less
+                # query compute.  Still exactly one dispatch per step.
+                self.cache, self.state = self._decode(
+                    self.params, self.cache, self.state, self.block_tables)
+            self.stats["decode_steps"] += 1
+            self.stats["prefill_tokens"] += granted
+            self.stats["max_step_prefill_tokens"] = max(
+                self.stats["max_step_prefill_tokens"], granted)
+            for slot in self._occupied():
+                if grants[slot]:
+                    self._pf[slot] += grants[slot]
+                    self._idx_ub[slot] = self._pf[slot]
+                elif self._pf[slot] >= self._plen[slot]:
+                    self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
+                                             self._slot_token_cap(slot))
+            return
         self.cache, self.state = self._decode(self.params, self.cache,
                                               self.state, self.block_tables)
         self.stats["decode_steps"] += 1
@@ -681,7 +944,10 @@ class ServingEngine:
         occ = self._occupied()
         slots = [i for i in occ if done_h[i]]
         for i in occ:   # sync point: tighten the index upper bounds
-            self._idx_ub[i] = self._plen[i] + max(int(count_h[i]) - 1, 0)
+            if self._pf[i] < self._plen[i]:
+                self._idx_ub[i] = self._pf[i]   # mid-prefill: mirror exact
+            else:
+                self._idx_ub[i] = self._plen[i] + max(int(count_h[i]) - 1, 0)
         if not slots:
             return []
         maxc = max(int(count_h[i]) for i in slots)
@@ -731,10 +997,26 @@ class ServingEngine:
         return done
 
     @property
-    def compilations(self) -> dict[str, int]:
-        """Compile-count accounting (the Alg. 18 amortization claim)."""
-        return {"decode": self._decode._cache_size(),
-                "prefill_buckets": len(self._prefill)}
+    def compilations(self) -> _Compilations:
+        """Compile-count accounting (the Alg. 18 amortization claim).
+
+        ``"prefill"``/``"decode"`` count the compilations serving each
+        role.  Under the chunked scheduler both name the ONE fused mixed
+        step — prefill stopped being a separate program.
+        ``"prefill_buckets"`` is the legacy bucketed count and stays 0
+        under the chunked scheduler; readers of it should migrate to
+        ``compilations()["prefill"]``.
+        """
+        buckets = len(self._prefill)
+        if self.scheduler == "chunked":
+            n = self._step._cache_size()
+            # the one-lane steady-state decode program may never compile
+            # (workloads that always carry prompt work); the mixed step
+            # is then the only program decoding
+            return _Compilations(decode=self._decode._cache_size() or n,
+                                 prefill=n, prefill_buckets=buckets)
+        return _Compilations(decode=self._decode._cache_size(),
+                             prefill=buckets, prefill_buckets=buckets)
 
     def memory_stats(self) -> FragmentationStats:
         """Pool occupancy + fragmentation (paged layout only).  Exact at

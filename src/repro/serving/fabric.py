@@ -291,10 +291,12 @@ class DecodeFabric:
 
     def _attend(self, q: jax.Array, k: jax.Array, v: jax.Array,
                 live: jax.Array) -> jax.Array:
-        """Scores over live cache positions only ([B, S_kv] mask)."""
+        """Scores over live cache positions only: ``live`` is [B, S_kv],
+        or [B, W, S_kv] per-lane masks (the chunked mixed step)."""
         s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) \
             / jnp.sqrt(jnp.float32(self.hd))
-        s = jnp.where(live[:, None, None, :], s, masking.NEG_INF)
+        m = live[:, None, None, :] if live.ndim == 2 else live[:, None]
+        s = jnp.where(m, s, masking.NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
@@ -430,6 +432,91 @@ class DecodeFabric:
                 v = c.v.at[rows, idx].set(v_new[:, 0].astype(c.v.dtype))
                 o = self._attend(q, k, v, live)
             a = self._mm((o * he).reshape(B, 1, -1), lp["wo"]) * dm
+            h1 = h + a
+            f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
+                          f_live) * dm
+            h2 = h1 + f
+            out = jnp.where((i < l_live)[:, None, None], h2, h)
+            return out, KVCache(k, v)
+
+        x, new_cache = jax.lax.scan(
+            body, x, (jnp.arange(mx.layers_enc_max), cache))
+        return self._unembed(x, table, mid, d_live, v_live), new_cache
+
+    # ------------------------------------------------------------------
+    # Fused mixed chunk/decode step (chunked prefill on the fabric)
+    # ------------------------------------------------------------------
+    def mixed_step(self, table: dict, cache: KVCache, tokens: jax.Array,
+                   start: jax.Array, n_live: jax.Array, topo: jax.Array,
+                   block_tables: jax.Array | None = None,
+                   paged_attn_impl: str = "gather",
+                   interpret: bool = True) -> tuple[jax.Array, KVCache]:
+        """tokens [B, W] + per-slot registers topo [B, N_REGS] -> (masked
+        logits [B, W, V_max], new cache).
+
+        The W-lane generalization of ``decode_step``: lane ``l`` of slot
+        ``b`` sits at cache position ``start[b] + l`` and only the first
+        ``n_live[b]`` lanes are real — a decoding slot uses one lane, a
+        prefilling slot a chunk of its prompt, an idle slot none.  Chunk
+        K/V are written before the attend, so one causal-vs-cache mask
+        covers intra-chunk causality and the prior cache.  Register
+        values, lane counts and chunk contents are all data: prefill and
+        decode for the whole fleet share this one compilation.
+        """
+        mx = self.mx
+        B, W = tokens.shape
+        mid, h_live = topo[:, REG_MODEL], topo[:, REG_HEADS]
+        l_live, d_live = topo[:, REG_LAYERS], topo[:, REG_DMODEL]
+        f_live, v_live = topo[:, REG_DFF], topo[:, REG_VOCAB]
+        start = jnp.asarray(start, jnp.int32)
+        positions = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+        emb = table["embed"][mid[:, None], tokens].astype(self.compute_dtype)
+        x = emb * masking.slot_mask(mx.d_model_max, d_live,
+                                    emb.dtype)[:, None, :]
+        he = masking.slot_mask(mx.heads_max, h_live)[:, None, :, None] \
+            .astype(self.compute_dtype)
+        dm = masking.slot_mask(mx.d_model_max, d_live)[:, None] \
+            .astype(self.compute_dtype)
+        lane_live = masking.lane_mask(W, n_live)
+        if block_tables is not None:
+            bs = cache.k.shape[2]
+            t_max = block_tables.shape[1] * bs
+            # dead lanes -> index t_max -> the null block absorbs them
+            idx_w = jnp.where(lane_live, positions, t_max)
+            blk, off = paged_write_slot(idx_w, block_tables, bs)
+            live = masking.chunk_causal_mask(t_max, start, W)
+        else:
+            rows = jnp.arange(B)[:, None]
+            s_max = cache.k.shape[2]
+            # dead lanes scatter out of bounds and are dropped
+            pos = jnp.where(lane_live, positions, s_max)
+            live = masking.chunk_causal_mask(s_max, start, W)
+
+        def body(h, inp):
+            i, c = inp
+            lp = self._gather_layer(table, mid, i)
+            xn = self._norm(h, lp["ln1"], d_live)
+            q, k_new, v_new = self._qkv(xn, lp, positions, he)
+            if block_tables is not None:
+                k = c.k.at[blk, off].set(k_new.astype(c.k.dtype))
+                v = c.v.at[blk, off].set(v_new.astype(c.v.dtype))
+                if paged_attn_impl == "pallas":
+                    from repro.kernels.chunked_prefill import \
+                        chunked_prefill_attention
+                    o = chunked_prefill_attention(
+                        q, k, v, block_tables, start,
+                        live_kv=h_live, interpret=interpret)
+                else:
+                    kg = k[block_tables].reshape(B, t_max, mx.heads_max,
+                                                 self.hd)
+                    vg = v[block_tables].reshape(B, t_max, mx.heads_max,
+                                                 self.hd)
+                    o = self._attend(q, kg, vg, live)
+            else:
+                k = c.k.at[rows, pos].set(k_new.astype(c.k.dtype))
+                v = c.v.at[rows, pos].set(v_new.astype(c.v.dtype))
+                o = self._attend(q, k, v, live)
+            a = self._mm((o * he).reshape(B, W, -1), lp["wo"]) * dm
             h1 = h + a
             f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
                           f_live) * dm

@@ -79,10 +79,12 @@ def test_mixed_fleet_bit_identical_to_single_topology_engines():
     params_a, params_b = _params()
     eng_ab = _engine()
     mixed = _run_fleet(eng_ab, params_a, params_b)
-    # zero retraces after warmup: one fused decode compilation serves
-    # both topologies; prompts < 32 tokens share one prefill bucket too
+    # zero retraces after warmup: one fused mixed step serves both
+    # topologies' prefill AND decode (chunked scheduler — no bucketed
+    # prefill dispatch exists anymore)
     assert eng_ab.compilations["decode"] == 1
-    assert eng_ab.compilations["prefill_buckets"] == 1
+    assert eng_ab.compilations["prefill"] == 1
+    assert eng_ab.compilations["prefill_buckets"] == 0
 
     solo_a = _run_fleet(_engine(), params_a, params_b, only="a")
     solo_b = _run_fleet(_engine(), params_a, params_b, only="b")
