@@ -1,0 +1,21 @@
+"""Shared helpers for the benchmark scripts."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def append_json(path: str, key: str, payload: dict) -> None:
+    """Merge one benchmark's payload into the shared results file
+    (``BENCH_serving.json`` maps benchmark name -> payload, so each
+    script appends its section instead of overwriting the others)."""
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            try:
+                data = json.load(f)
+            except ValueError:
+                data = {}
+    data[key] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)

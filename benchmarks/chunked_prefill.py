@@ -29,11 +29,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
 import numpy as np
+
+try:                                   # package form (benchmarks.run)
+    from benchmarks._util import append_json
+except ModuleNotFoundError:            # direct script invocation
+    from _util import append_json
 
 from repro.configs import REGISTRY, reduced
 from repro.core.spec import MemorySpec, RuntimeSpec, SchedulerSpec
@@ -187,9 +191,8 @@ def run(arch: str, layers: int | None, max_batch: int, max_len: int,
         "compilations": {p: check[p]["compilations"] for p in policies},
         "streams_bit_identical": True,
     }
-    with open(out_json, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"  wrote {out_json}")
+    append_json(out_json, "chunked_prefill", payload)
+    print(f"  wrote {out_json} (key 'chunked_prefill')")
     if require_speedup is not None:
         got = speedups["ttft_short_warm"]
         assert got >= require_speedup, (

@@ -9,6 +9,7 @@
   fig12   — the 40-cell roofline table from the dry-run records
   fleet   — multi-topology serving vs per-model engines (equal memory)
   serving — chunked prefill vs bucketed (TTFT / tok/s; BENCH_serving.json)
+  qcache  — int8 vs bf16 KV cache at equal HBM (concurrency / drain)
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import traceback
 
 from benchmarks import (chunked_prefill, fig5_tilesize, fig8_heads,
                         fig11_portability, fig12_roofline, multi_topology,
-                        table1_throughput, table2_analytical)
+                        quantized_cache, table1_throughput, table2_analytical)
 
 
 def _fleet():
@@ -46,6 +47,20 @@ def _serving():
            f"{r['compilations']['chunked']['prefill']}")
 
 
+def _qcache():
+    r = quantized_cache.run(arch="qwen1.5-0.5b", layers=1, head_dim=64,
+                            max_len=64, budget_blocks=24, block_size=8,
+                            n_requests=36, max_batch=48, require_gain=1.8,
+                            out_json="BENCH_serving.json",
+                            require_identical=1.0)
+    yield "metric,bf16_cache,int8_cache"
+    yield (f"peak_concurrency,{r['peak_concurrency']['compute']},"
+           f"{r['peak_concurrency']['int8']}")
+    yield (f"steps_to_drain,{r['steps_to_drain']['compute']},"
+           f"{r['steps_to_drain']['int8']}")
+    yield f"concurrency_gain,1.00,{r['concurrency_gain']:.2f}"
+
+
 SECTIONS = [
     ("table1", table1_throughput.run),
     ("table2", table2_analytical.run),
@@ -55,6 +70,7 @@ SECTIONS = [
     ("fig12", fig12_roofline.run),
     ("fleet", _fleet),
     ("serving", _serving),
+    ("qcache", _qcache),
 ]
 
 

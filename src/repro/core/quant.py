@@ -19,6 +19,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# Leaves below this many elements stay float when serving-time weight
+# quantization walks a parameter tree (biases, norms, tiny projections:
+# the memory win is negligible and the relative error is largest).  The
+# deployment default; override per-engine via
+# ``core.spec.ExecutionSpec(quant_min_size=...)``.
+DEFAULT_QUANT_MIN_SIZE = 65_536
+
 
 class QTensor(NamedTuple):
     values: jax.Array  # int8

@@ -10,7 +10,9 @@ for tables.  Three parallel entry points mirror ``ParamBuilder``'s modes:
 * ``quantize_axes``     — PartitionSpecs (sharding trees).
 
 All three produce structurally identical trees, so the existing
-``tree_param_shardings`` machinery works unchanged.
+``tree_param_shardings`` machinery works unchanged.  The eligibility
+floor defaults to ``core.quant.DEFAULT_QUANT_MIN_SIZE`` and is
+configured per engine through ``ExecutionSpec.quant_min_size``.
 """
 from __future__ import annotations
 
@@ -18,9 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.quant import QTensor, quantize
-
-_MIN_SIZE = 65_536
+from repro.core.quant import DEFAULT_QUANT_MIN_SIZE, QTensor
 
 
 def _last_key(path) -> str:
@@ -30,7 +30,7 @@ def _last_key(path) -> str:
     return ""
 
 
-def _eligible(path, leaf, min_size: int = _MIN_SIZE) -> str | None:
+def _eligible(path, leaf, min_size: int = DEFAULT_QUANT_MIN_SIZE) -> str | None:
     """Returns 'kernel' / 'table' when the leaf should be quantized."""
     name = _last_key(path)
     if name not in ("kernel", "table"):
@@ -52,7 +52,7 @@ def _map_with_path(tree, fn):
     return jax.tree_util.tree_unflatten(flat[1], leaves)
 
 
-def _quantize_leaf(leaf, kind: str) -> QTensor:
+def quantize_leaf(leaf, kind: str) -> QTensor:
     """Kernels [..., K, N]: per-(stack, column) scales reducing over the
     contraction dim only; tables [V, ...]: per-row scales."""
     w = leaf.astype(jnp.float32)
@@ -63,19 +63,19 @@ def _quantize_leaf(leaf, kind: str) -> QTensor:
     return QTensor(q, scale)
 
 
-def quantize_params(params, min_size: int = _MIN_SIZE):
+def quantize_params(params, min_size: int = DEFAULT_QUANT_MIN_SIZE):
     """Real arrays -> int8 QTensors (kernels per-column, tables per-row)."""
 
     def one(path, leaf):
         kind = _eligible(path, leaf, min_size)
         if kind is None:
             return leaf
-        return _quantize_leaf(leaf, kind)
+        return quantize_leaf(leaf, kind)
 
     return _map_with_path(params, one)
 
 
-def quantize_abstract(abstract, min_size: int = _MIN_SIZE):
+def quantize_abstract(abstract, min_size: int = DEFAULT_QUANT_MIN_SIZE):
     """ShapeDtypeStruct tree -> QTensor(SDS int8, SDS f32 scale)."""
 
     def one(path, leaf):
@@ -93,7 +93,7 @@ def quantize_abstract(abstract, min_size: int = _MIN_SIZE):
     return _map_with_path(abstract, one)
 
 
-def quantize_axes(axes, abstract, min_size: int = _MIN_SIZE):
+def quantize_axes(axes, abstract, min_size: int = DEFAULT_QUANT_MIN_SIZE):
     """Logical-axes tree -> QTensor(P values, P scale) matching
     ``quantize_abstract``'s structure.  The scale inherits the spec of its
     non-degenerate dim so it co-shards with the values."""

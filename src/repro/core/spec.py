@@ -33,7 +33,9 @@ from typing import Any
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.kv_quant import KV_DTYPES, CacheCodec
 from repro.core.paging import PagingConfig, blocks_for_tokens
+from repro.core.quant import DEFAULT_QUANT_MIN_SIZE
 from repro.core.registers import Maxima, TopologyRegisters, registers_for
 
 _MATMUL_BACKENDS = ("xla", "pallas")
@@ -41,6 +43,42 @@ _PAGED_ATTN_IMPLS = ("gather", "pallas")
 _CACHE_LAYOUTS = ("dense", "paged")
 _QUANT_MODES = ("none", "int8")
 _SCHEDULER_POLICIES = ("auto", "chunked", "bucketed")
+
+# String spellings accepted for ExecutionSpec.param_dtype/compute_dtype —
+# the CLI surface (launch/serve.py --param-dtype bf16) and config files
+# speak strings; the spec normalizes them to jnp dtypes at construction.
+_DTYPE_ALIASES = {
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    "fp32": jnp.float32, "f32": jnp.float32, "float32": jnp.float32,
+    "fp16": jnp.float16, "f16": jnp.float16, "float16": jnp.float16,
+}
+
+# Families whose decode state is a genuine KV/latent cache; recurrent
+# (SSM / RG-LRU) and enc-dec state keeps the compute dtype.
+KV_QUANTIZABLE_FAMILIES = ("dense", "vlm", "moe")
+
+
+def _normalize_dtype(field_name: str, value):
+    """Accept jnp dtypes or their string names; reject non-float dtypes
+    with the valid spellings in the message."""
+    if isinstance(value, str):
+        key = value.lower()
+        if key not in _DTYPE_ALIASES:
+            raise ValueError(
+                f"ExecutionSpec.{field_name}={value!r} is not a recognized "
+                f"dtype name; use one of {sorted(set(_DTYPE_ALIASES))}")
+        return _DTYPE_ALIASES[key]
+    try:
+        dt = jnp.dtype(value)
+    except TypeError as e:
+        raise ValueError(
+            f"ExecutionSpec.{field_name}={value!r} is not a dtype") from e
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(
+            f"ExecutionSpec.{field_name}={value!r} must be a floating "
+            "dtype (params/activations; int8 quantization is configured "
+            "through quant= and MemorySpec.kv_dtype, not the dtypes)")
+    return value
 
 # Families whose prefill can be replayed through the fused chunked step
 # (attention caches are write-then-attend; recurrent / rolling-window /
@@ -54,6 +92,20 @@ class ExecutionSpec:
 
     These are trace-time choices — changing any of them recompiles, so
     they live beside the maxima, not beside the registers.
+
+    * ``param_dtype`` / ``compute_dtype`` accept jnp dtypes or their
+      string names (``"bf16"``, ``"fp32"``, ...) and are normalized at
+      construction, so CLI flags and config files can pass strings.
+    * ``quant="int8"`` quantizes serving *weights* (paper C6): eligible
+      kernels/tables become per-column/per-row int8 ``QTensor``s.  Works
+      in single-topology AND multi-topology (fleet) mode — the fabric's
+      model table packs int8 values + f32 scales per member.
+    * ``quant_min_size`` — parameter leaves below this many elements
+      stay float (biases, norms, tiny projections); threaded through
+      ``quantize_params``/``quantize_abstract``/``quantize_axes`` and the
+      fleet weight table.
+    * The KV *cache* dtype is a memory-provisioning choice and lives on
+      ``MemorySpec.kv_dtype``, not here.
     """
 
     matmul_backend: str = "xla"      # "xla" | "pallas" (ADAPTOR tiled kernels)
@@ -61,6 +113,7 @@ class ExecutionSpec:
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16
     quant: str = "none"              # "none" | "int8" (C6 serving weights)
+    quant_min_size: int = DEFAULT_QUANT_MIN_SIZE  # leaf-size quant floor
     grouped_gqa: bool = False        # GQA-grouped decode contraction
 
     def __post_init__(self) -> None:
@@ -76,15 +129,36 @@ class ExecutionSpec:
             raise ValueError(
                 f"ExecutionSpec.quant={self.quant!r} is not one of "
                 f"{_QUANT_MODES}")
+        if self.quant_min_size < 0:
+            raise ValueError(
+                f"ExecutionSpec.quant_min_size={self.quant_min_size} must "
+                "be >= 0 (elements below which a param leaf stays float)")
+        object.__setattr__(self, "param_dtype",
+                           _normalize_dtype("param_dtype", self.param_dtype))
+        object.__setattr__(self, "compute_dtype",
+                           _normalize_dtype("compute_dtype",
+                                            self.compute_dtype))
 
 
 @dataclass(frozen=True)
 class MemorySpec:
-    """How decode-time memory is provisioned: cache layout + pool geometry.
+    """How decode-time memory is provisioned: cache layout, pool
+    geometry, and the KV storage dtype.
 
     ``num_blocks=None`` sizes the paged pool at the dense worst case
     (``max_batch * max_len / block_size``), which makes ``paged`` a pure
     fragmentation win with identical capacity.
+
+    ``kv_dtype`` selects the cache codec (``core.kv_quant``):
+
+    * ``"compute"`` — bf16 cache values, the historical behaviour.
+    * ``"int8"``    — quantize-on-write symmetric int8 with one f32
+      scale per (position, kv-head) row, stored beside the dense rows or
+      the paged pool and read back through a fused dequant in every
+      attention variant.  ~``2 hd / (hd + 4)``x fewer cache bytes per
+      token, so nearly 2x concurrent requests at equal HBM.  Supported
+      for the KV/latent-cache families (``dense``/``vlm``/``moe``,
+      GQA and MLA) in every mode: dense, paged, chunked, fleet.
     """
 
     cache_layout: str = "dense"      # "dense" | "paged"
@@ -92,12 +166,17 @@ class MemorySpec:
     max_len: int = 512
     block_size: int = 16
     num_blocks: int | None = None    # None -> dense worst case
+    kv_dtype: str = "compute"        # "compute" | "int8" (cache codec)
 
     def __post_init__(self) -> None:
         if self.cache_layout not in _CACHE_LAYOUTS:
             raise ValueError(
                 f"MemorySpec.cache_layout={self.cache_layout!r} is not one "
                 f"of {_CACHE_LAYOUTS}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"MemorySpec.kv_dtype={self.kv_dtype!r} is not one of "
+                f"{KV_DTYPES}")
         if self.max_batch <= 0 or self.max_len <= 0:
             raise ValueError(
                 f"MemorySpec needs positive max_batch/max_len, got "
@@ -133,6 +212,10 @@ class MemorySpec:
             return None
         return PagingConfig(block_size=self.block_size,
                             num_blocks=self.resolved_num_blocks)
+
+    def codec(self) -> CacheCodec:
+        """Lower to the cache codec (quantize-on-write policy)."""
+        return CacheCodec(self.kv_dtype)
 
 
 @dataclass(frozen=True)
@@ -232,6 +315,14 @@ class RuntimeSpec:
                 f"cache_layout='paged' is unsupported for family "
                 f"{cfg.family!r} (SSM / rolling-window / enc-dec decode "
                 "state is not paged); use cache_layout='dense'")
+        if self.memory.kv_dtype == "int8" and \
+                cfg.family not in KV_QUANTIZABLE_FAMILIES:
+            raise ValueError(
+                f"kv_dtype='int8' is unsupported for family {cfg.family!r}: "
+                "only KV/latent attention caches are quantized "
+                f"(families {KV_QUANTIZABLE_FAMILIES}); recurrent / "
+                "rolling-window / enc-dec decode state keeps the compute "
+                "dtype — use kv_dtype='compute'")
         if self.scheduler.policy == "chunked":
             # "auto" silently falls back to bucketed on these; an explicit
             # chunked request fails loudly at construction instead

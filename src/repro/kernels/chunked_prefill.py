@@ -19,6 +19,10 @@ KV BlockSpec index map reads ``table[seq, j]``, so the non-contiguous
 pool walk costs no gather in HBM.  Dead lanes (>= the slot's live count)
 compute a finite garbage row that the caller drops — the idle-PE
 discipline.
+
+int8 KV cache: per-(block entry, kv-head) scales stream in beside the
+int8 tiles through the same block-table index map and the dequant fuses
+into the dots (see ``paged_attention`` for the layout).
 """
 from __future__ import annotations
 
@@ -33,13 +37,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _chunk_kernel(scale: float, bs: int, masked_heads: bool, *refs):
-    if masked_heads:
-        bt_ref, start_ref, live_ref, q_ref, k_ref, v_ref, o_ref, \
-            acc, m_s, l_s = refs
-    else:
-        bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s = refs
-        live_ref = None
+def _chunk_kernel(scale: float, bs: int, masked_heads: bool,
+                  quantized: bool, *refs):
+    refs = list(refs)
+    bt_ref, start_ref = refs.pop(0), refs.pop(0)
+    live_ref = refs.pop(0) if masked_heads else None
+    q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    ks_ref = refs.pop(0) if quantized else None
+    vs_ref = refs.pop(0) if quantized else None
+    o_ref, acc, m_s, l_s = refs
     b = pl.program_id(0)
     g = pl.program_id(1)
     lane = pl.program_id(2)
@@ -54,6 +60,11 @@ def _chunk_kernel(scale: float, bs: int, masked_heads: bool, *refs):
     q = q_ref[0, 0, 0]                 # [R, hdp]  (one lane's query group)
     k = k_ref[0, 0]                    # [bs, hdp] (one pool block)
     v = v_ref[0, 0]
+    if quantized:
+        # dequant fused at the tile: one scale per block entry (row)
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32) * ks_ref[0, 0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     # chunk K/V are already in the pool, so the single causal-vs-cache
@@ -89,6 +100,8 @@ def chunked_prefill_attention(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, block_tables: jax.Array,
                               start: jax.Array, *,
                               live_kv: jax.Array | None = None,
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None,
                               scale: float | None = None,
                               interpret: bool = False) -> jax.Array:
     """W-lane chunk/decode attention over the pooled KV cache.
@@ -100,6 +113,9 @@ def chunked_prefill_attention(q: jax.Array, k_pool: jax.Array,
     start:        [B] int32         first lane's cache position per slot
     live_kv:      [B] int32 or None live KV-head groups per sequence
                                     (multi-topology head-lane masking)
+    k/v_scale:    [NB, bs, kv] f32 or None — the int8 cache codec's
+                  per-(block entry, kv-head) scales; when given, pool
+                  values are int8 and the dequant fuses into the kernel
     -> [B, W, h, hd]
 
     Softmax statistics accumulate in f32 VMEM scratch; numerics match
@@ -123,36 +139,46 @@ def chunked_prefill_attention(q: jax.Array, k_pool: jax.Array,
         .swapaxes(1, 2)
 
     masked_heads = live_kv is not None
+    quantized = k_scale is not None
     # index maps take one trailing arg per scalar-prefetch operand
     if masked_heads:
         q_map = lambda b, g, l, j, bt, st, lv: (b, g, l, 0, 0)
         kv_map = lambda b, g, l, j, bt, st, lv: (bt[b, j], g, 0, 0)
+        sc_map = lambda b, g, l, j, bt, st, lv: (bt[b, j], g, 0)
         prefetch = (block_tables, start, live_kv)
     else:
         q_map = lambda b, g, l, j, bt, st: (b, g, l, 0, 0)
         kv_map = lambda b, g, l, j, bt, st: (bt[b, j], g, 0, 0)
+        sc_map = lambda b, g, l, j, bt, st: (bt[b, j], g, 0)
         prefetch = (block_tables, start)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, R, hdp), q_map),
+        pl.BlockSpec((1, 1, bs, hdp), kv_map),
+        pl.BlockSpec((1, 1, bs, hdp), kv_map),
+    ]
+    operands = [qg, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, bs), sc_map),
+                     pl.BlockSpec((1, 1, bs), sc_map)]
+        operands += [k_scale.swapaxes(1, 2), v_scale.swapaxes(1, 2)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
         grid=(B, kv, W, nblk),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, R, hdp), q_map),
-            pl.BlockSpec((1, 1, bs, hdp), kv_map),
-            pl.BlockSpec((1, 1, bs, hdp), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, R, hdp), q_map),
         scratch_shapes=[pltpu.VMEM((R, hdp), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_chunk_kernel, scale, bs, masked_heads),
+        functools.partial(_chunk_kernel, scale, bs, masked_heads, quantized),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, kv, W, R, hdp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, kv, W, R, hdp),
+                                       jnp.float32 if quantized else q.dtype),
         interpret=interpret,
-    )(*prefetch, qg, kp, vp)
+    )(*prefetch, *operands)
     return out[:, :, :, :n_rep, :hd].transpose(0, 2, 1, 3, 4) \
-        .reshape(B, W, h, hd)
+        .reshape(B, W, h, hd).astype(q.dtype)
 
 
 def _rup(x: int, m: int) -> int:

@@ -18,6 +18,12 @@ accumulating the running (max, sum, acc) triple in VMEM scratch exactly
 as in ``flash_attention``; entries past the slot's live length — and
 whole blocks whose table entry is the null block — are masked to -inf,
 so they contribute exactly zero.
+
+int8 KV cache (``MemorySpec.kv_dtype="int8"``): the per-(block entry,
+kv-head) scales ride the *same* block-table index map as the values —
+one f32 scale row per pool block per head streams into VMEM beside its
+int8 tile and the dequant multiply fuses into the score/value dots, so
+the quantized pool never takes a round trip through HBM at float width.
 """
 from __future__ import annotations
 
@@ -32,13 +38,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _paged_kernel(scale: float, bs: int, masked_heads: bool, *refs):
-    if masked_heads:
-        bt_ref, len_ref, live_ref, q_ref, k_ref, v_ref, o_ref, \
-            acc, m_s, l_s = refs
-    else:
-        bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s = refs
-        live_ref = None
+def _paged_kernel(scale: float, bs: int, masked_heads: bool,
+                  quantized: bool, *refs):
+    refs = list(refs)
+    bt_ref, len_ref = refs.pop(0), refs.pop(0)
+    live_ref = refs.pop(0) if masked_heads else None
+    q_ref, k_ref, v_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    ks_ref = refs.pop(0) if quantized else None
+    vs_ref = refs.pop(0) if quantized else None
+    o_ref, acc, m_s, l_s = refs
     b = pl.program_id(0)
     g = pl.program_id(1)
     j = pl.program_id(2)
@@ -52,6 +60,11 @@ def _paged_kernel(scale: float, bs: int, masked_heads: bool, *refs):
     q = q_ref[0, 0]                    # [R, hdp]  (query group)
     k = k_ref[0, 0]                    # [bs, hdp] (one pool block)
     v = v_ref[0, 0]
+    if quantized:
+        # dequant fused at the tile: one scale per block entry (row)
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32) * ks_ref[0, 0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     # token position of each column = logical block j * bs + offset; the
@@ -87,6 +100,8 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,
                            live_kv: jax.Array | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
                            scale: float | None = None,
                            interpret: bool = False) -> jax.Array:
     """One-token decode attention over the pooled KV cache.
@@ -99,6 +114,10 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                   multi-topology serving pads the head axis to the fabric
                   maxima, and groups past a slot's live count are masked
                   to exact zeros (idle PE lanes)
+    k/v_scale:    [NB, bs, kv] f32 or None — the int8 cache codec's
+                  per-(block entry, kv-head) scales; when given, pool
+                  values are int8 and the dequant fuses into the kernel,
+                  the scales walking the same block-table index map
     -> [B, h, hd]
 
     Softmax statistics accumulate in f32 VMEM scratch; numerics match
@@ -124,35 +143,47 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         .swapaxes(1, 2)
 
     masked_heads = live_kv is not None
+    quantized = k_scale is not None
     # index maps take one trailing arg per scalar-prefetch operand
     if masked_heads:
         q_map = lambda b, g, j, bt, ln, lv: (b, g, 0, 0)
         kv_map = lambda b, g, j, bt, ln, lv: (bt[b, j], g, 0, 0)
+        sc_map = lambda b, g, j, bt, ln, lv: (bt[b, j], g, 0)
         prefetch = (block_tables, lengths, live_kv)
     else:
         q_map = lambda b, g, j, bt, ln: (b, g, 0, 0)
         kv_map = lambda b, g, j, bt, ln: (bt[b, j], g, 0, 0)
+        sc_map = lambda b, g, j, bt, ln: (bt[b, j], g, 0)
         prefetch = (block_tables, lengths)
+    in_specs = [
+        pl.BlockSpec((1, 1, R, hdp), q_map),
+        pl.BlockSpec((1, 1, bs, hdp), kv_map),
+        pl.BlockSpec((1, 1, bs, hdp), kv_map),
+    ]
+    operands = [qg, kp, vp]
+    if quantized:
+        # scales in the same kv-major layout as the pool; the BlockSpec
+        # rides the identical scalar-prefetched table walk
+        in_specs += [pl.BlockSpec((1, 1, bs), sc_map),
+                     pl.BlockSpec((1, 1, bs), sc_map)]
+        operands += [k_scale.swapaxes(1, 2), v_scale.swapaxes(1, 2)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
         grid=(B, kv, nblk),
-        in_specs=[
-            pl.BlockSpec((1, 1, R, hdp), q_map),
-            pl.BlockSpec((1, 1, bs, hdp), kv_map),
-            pl.BlockSpec((1, 1, bs, hdp), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, R, hdp), q_map),
         scratch_shapes=[pltpu.VMEM((R, hdp), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32),
                         pltpu.VMEM((R, 1), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_kernel, scale, bs, masked_heads),
+        functools.partial(_paged_kernel, scale, bs, masked_heads, quantized),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, kv, R, hdp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, kv, R, hdp),
+                                       jnp.float32 if quantized else q.dtype),
         interpret=interpret,
-    )(*prefetch, qg, kp, vp)
-    return out[:, :, :n_rep, :hd].reshape(B, h, hd)
+    )(*prefetch, *operands)
+    return out[:, :, :n_rep, :hd].reshape(B, h, hd).astype(q.dtype)
 
 
 def _rup(x: int, m: int) -> int:

@@ -40,7 +40,18 @@ def main() -> None:
     ap.add_argument("--kernels", choices=("xla", "pallas"), default="xla",
                     help="matmul routing for prefill/decode")
     ap.add_argument("--quant", choices=("none", "int8"), default="none",
-                    help="serving-time weight quantization (C6)")
+                    help="serving-time weight quantization (C6); works in "
+                         "--fleet mode too (int8 fleet weight table)")
+    ap.add_argument("--quant-min-size", type=int, default=None,
+                    help="param leaves under this many elements stay float")
+    ap.add_argument("--kv-dtype", choices=("compute", "int8"),
+                    default="compute",
+                    help="KV-cache storage codec: bf16 values or "
+                         "quantize-on-write int8 (~2x cache capacity)")
+    ap.add_argument("--param-dtype", default=None,
+                    help="parameter dtype by name, e.g. fp32 / bf16")
+    ap.add_argument("--compute-dtype", default=None,
+                    help="activation dtype by name, e.g. bf16 / fp32")
     ap.add_argument("--cache-layout", choices=("dense", "paged"),
                     default="dense")
     ap.add_argument("--block-size", type=int, default=16,
@@ -53,14 +64,24 @@ def main() -> None:
     cfgs = [reduced(REGISTRY[n]) for n in names]
     maxima = (maxima_for(*cfgs, seq_max=args.max_len)
               if args.fleet else None)
+    # string dtype names flow straight into the spec — ExecutionSpec
+    # normalizes "bf16"/"fp32"/... at construction
+    ex_kw = {}
+    if args.param_dtype is not None:
+        ex_kw["param_dtype"] = args.param_dtype
+    if args.compute_dtype is not None:
+        ex_kw["compute_dtype"] = args.compute_dtype
+    if args.quant_min_size is not None:
+        ex_kw["quant_min_size"] = args.quant_min_size
     spec = RuntimeSpec(
         arch=cfgs[0], maxima=maxima,
         execution=ExecutionSpec(matmul_backend=args.kernels,
-                                quant=args.quant),
+                                quant=args.quant, **ex_kw),
         memory=MemorySpec(cache_layout=args.cache_layout,
                           max_batch=args.max_batch, max_len=args.max_len,
                           block_size=args.block_size,
-                          num_blocks=args.num_blocks))
+                          num_blocks=args.num_blocks,
+                          kv_dtype=args.kv_dtype))
     eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
                         sampling=SamplingParams(temperature=args.temperature,
                                                 top_k=40))
@@ -89,6 +110,10 @@ def main() -> None:
         print(f"fleet: {names} served by ONE fused step "
               f"(decode compilations = {eng.compilations['decode']})")
     print("compile accounting:", eng.compilations)
+    if args.kv_dtype == "int8":
+        hd = cfgs[0].resolved_head_dim
+        print(f"int8 KV cache: {2 * hd / (hd + 4):.2f}x fewer cache "
+              f"bytes/token than bf16 at head_dim={hd}")
     print(f"host traffic: {eng.stats['device_gets']} bulk device_gets over "
           f"{eng.stats['decode_steps']} fused decode steps")
     if args.cache_layout == "paged":

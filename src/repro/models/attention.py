@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig
 from repro.core import masking
+from repro.core.kv_quant import (FLOAT_CODEC, CacheCodec, cache_put,
+                                 gather_view)
 from repro.core.paging import NULL_BLOCK
 from repro.distributed.sharding import constrain
 from repro.kernels.runtime import interpret_default
@@ -50,10 +52,20 @@ class KVCache(NamedTuple):
     * paged — ``[num_blocks, block_size, n_kv, hd]``: a pooled cache of
       fixed-size token blocks; a slot's sequence is scattered across the
       pool and addressed through its block table (``core.paging``).
+
+    Two storage codecs share it too (``core.kv_quant.CacheCodec``):
+    under ``kv_dtype="int8"`` the ``k``/``v`` values are int8 and the
+    ``k_scale``/``v_scale`` arrays (values shape minus the trailing
+    head_dim — one f32 scale per (position, kv-head) row) ride beside
+    them through the same scatters, gathers and block tables; in
+    ``"compute"`` mode the scale fields are None and the pytree is
+    structurally the historical (k, v) pair.
     """
 
     k: jax.Array
     v: jax.Array
+    k_scale: jax.Array | None = None
+    v_scale: jax.Array | None = None
 
 
 def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
@@ -216,8 +228,11 @@ def gqa_attention(x: jax.Array, p: dict, cfg: ArchConfig, *,
 def gqa_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
                 positions: jax.Array, max_len: int,
                 window: int | None = None,
-                causal: bool = True) -> tuple[jax.Array, KVCache]:
+                causal: bool = True,
+                codec: CacheCodec | None = None
+                ) -> tuple[jax.Array, KVCache]:
     """Full-sequence attention that also emits this layer's decode cache."""
+    codec = codec or FLOAT_CODEC
     b_, s, _ = x.shape
     q, k, v = gqa_qkv(x, p, cfg, positions)
     n_rep = cfg.num_heads // max(cfg.num_kv_heads, 1)
@@ -231,7 +246,11 @@ def gqa_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
     o = apply_dense(o.reshape(b_, s, cfg.num_heads * cfg.resolved_head_dim),
                     p["wo"])
     if window is not None:
-        # rolling buffer: row (p % window) holds token p, for the last W tokens
+        # rolling buffer: row (p % window) holds token p, for the last W
+        # tokens (hybrid family — never quantized, see spec validation)
+        if codec.quantized:
+            raise ValueError("kv_dtype='int8' is unsupported for "
+                             "rolling-window attention caches")
         w = min(window, max_len)
         start = max(s - w, 0)
         rows = (jnp.arange(start, start + w) % w) if s >= w else jnp.arange(w)
@@ -243,21 +262,31 @@ def gqa_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
         cv = cv.at[:, rows[:n_src]].set(src[1].astype(jnp.bfloat16))
         return o, KVCache(ck, cv)
     pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
-    return o, KVCache(jnp.pad(k.astype(jnp.bfloat16), pad),
-                      jnp.pad(v.astype(jnp.bfloat16), pad))
+    kq, ks = codec.store(k, jnp.bfloat16)
+    vq, vs = codec.store(v, jnp.bfloat16)
+    if ks is None:
+        return o, KVCache(jnp.pad(kq, pad), jnp.pad(vq, pad))
+    return o, KVCache(jnp.pad(kq, pad), jnp.pad(vq, pad),
+                      jnp.pad(ks, pad[:-1]), jnp.pad(vs, pad[:-1]))
 
 
 def mla_prefill(x: jax.Array, p: dict, cfg: ArchConfig, *,
-                positions: jax.Array, max_len: int
+                positions: jax.Array, max_len: int,
+                codec: CacheCodec | None = None
                 ) -> tuple[jax.Array, MLACache]:
     """MLA prefill: attention output + this layer's latent cache."""
+    codec = codec or FLOAT_CODEC
     m = cfg.mla
     b_, s, _ = x.shape
     o = mla_attention(x, p, cfg, positions=positions)
     c_kv, k_rope = _mla_latent(x, p, m, positions, cfg.rope_theta)
     pad = ((0, 0), (0, max_len - s), (0, 0))
-    return o, MLACache(jnp.pad(c_kv.astype(jnp.bfloat16), pad),
-                       jnp.pad(k_rope.astype(jnp.bfloat16), pad))
+    cq, cs = codec.store(c_kv, jnp.bfloat16)
+    rq, rs = codec.store(k_rope, jnp.bfloat16)
+    if cs is None:
+        return o, MLACache(jnp.pad(cq, pad), jnp.pad(rq, pad))
+    return o, MLACache(jnp.pad(cq, pad), jnp.pad(rq, pad),
+                       jnp.pad(cs, pad[:-1]), jnp.pad(rs, pad[:-1]))
 
 
 def as_index_vector(cache_index: jax.Array, batch: int) -> jax.Array:
@@ -300,14 +329,18 @@ def _gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, live: jax.Array,
 def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
                cache_index: jax.Array, *,
                window: int | None = None,
-               grouped: bool = False) -> tuple[jax.Array, KVCache]:
+               grouped: bool = False,
+               codec: CacheCodec | None = None) -> tuple[jax.Array, KVCache]:
     """One-token decode against a [B, S_max, kv, hd] cache.
 
     ``cache_index`` is the number of tokens already in the cache — a
     scalar, or a [B] vector for per-slot serving (continuous batching).
     For windowed layers the cache is a rolling buffer of size window.
     ``grouped``: GQA-grouped score contraction (no repeat_kv copy).
+    ``codec``: the cache codec; int8 quantizes the new token's K/V row on
+    write and fuses the dequant into the attend.
     """
+    codec = codec or FLOAT_CODEC
     b_, one, _ = x.shape
     idx_vec = as_index_vector(cache_index, b_)
     positions = idx_vec[:, None]
@@ -315,15 +348,18 @@ def gqa_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
     s_max = cache.k.shape[1]
     slot = idx_vec % s_max if window is not None else idx_vec
     rows = jnp.arange(b_)
-    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
-    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    kq, ks = codec.store(k_new[:, 0], cache.k.dtype)
+    vq, vs = codec.store(v_new[:, 0], cache.v.dtype)
+    k, k_sc = cache_put(cache.k, cache.k_scale, (rows, slot), kq, ks)
+    v, v_sc = cache_put(cache.v, cache.v_scale, (rows, slot), vq, vs)
     idx = jnp.arange(s_max)
     if window is not None:  # rolling-buffer validity, per slot
         live = (idx[None, :] <= slot[:, None]) | (idx_vec[:, None] >= s_max)
     else:
         live = idx[None, :] <= idx_vec[:, None]
-    o = _gqa_attend(q, k, v, live, cfg, grouped)
-    return apply_dense(o, p["wo"]), KVCache(k, v)
+    o = _gqa_attend(q, codec.load(k, k_sc, x.dtype),
+                    codec.load(v, v_sc, x.dtype), live, cfg, grouped)
+    return apply_dense(o, p["wo"]), KVCache(k, v, k_sc, v_sc)
 
 
 def paged_write_slot(idx_vec: jax.Array, block_tables: jax.Array,
@@ -349,36 +385,47 @@ def paged_write_slot(idx_vec: jax.Array, block_tables: jax.Array,
 def gqa_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
                      cache_index: jax.Array, block_tables: jax.Array, *,
                      grouped: bool = False,
-                     impl: str = "gather") -> tuple[jax.Array, KVCache]:
+                     impl: str = "gather",
+                     codec: CacheCodec | None = None
+                     ) -> tuple[jax.Array, KVCache]:
     """One-token decode against the pooled [NB, bs, kv, hd] cache.
 
     ``block_tables``: [B, blocks_per_slot] int32 — logical block i of a
     slot lives in pool row ``block_tables[slot, i]`` (0 = null block).
     ``impl``: "gather" (XLA gather + the dense contraction, bit-identical
     to the dense layout) or "pallas" (the fused paged-decode kernel).
+    With an int8 codec the per-(block entry, kv-head) scales ride the
+    same block tables: gathered beside the values on the XLA path, walked
+    by the same scalar-prefetched index maps inside the Pallas kernel.
     """
+    codec = codec or FLOAT_CODEC
     b_, one, _ = x.shape
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     bs = cache.k.shape[1]
     idx_vec = as_index_vector(cache_index, b_)
     q, k_new, v_new = gqa_qkv(x, p, cfg, idx_vec[:, None])
     blk, off = paged_write_slot(idx_vec, block_tables, bs)
-    k = cache.k.at[blk, off].set(k_new[:, 0].astype(cache.k.dtype))
-    v = cache.v.at[blk, off].set(v_new[:, 0].astype(cache.v.dtype))
+    kq, ks = codec.store(k_new[:, 0], cache.k.dtype)
+    vq, vs = codec.store(v_new[:, 0], cache.v.dtype)
+    k, k_sc = cache_put(cache.k, cache.k_scale, (blk, off), kq, ks)
+    v, v_sc = cache_put(cache.v, cache.v_scale, (blk, off), vq, vs)
     t_max = block_tables.shape[1] * bs
     if impl == "pallas":
         from repro.kernels.paged_attention import paged_decode_attention
         lengths = jnp.minimum(idx_vec + 1, t_max)
         o = paged_decode_attention(
             q[:, 0], k, v, block_tables, lengths,
+            k_scale=k_sc, v_scale=v_sc,
             interpret=interpret_default())
         o = o.reshape(b_, one, cfg.num_heads * hd)
     else:
-        kg = k[block_tables].reshape(b_, t_max, kv, hd)
-        vg = v[block_tables].reshape(b_, t_max, kv, hd)
+        kg = gather_view(codec, k, k_sc, block_tables,
+                          (b_, t_max, kv, hd), x.dtype)
+        vg = gather_view(codec, v, v_sc, block_tables,
+                          (b_, t_max, kv, hd), x.dtype)
         live = jnp.arange(t_max)[None, :] <= idx_vec[:, None]
         o = _gqa_attend(q, kg, vg, live, cfg, grouped)
-    return apply_dense(o, p["wo"]), KVCache(k, v)
+    return apply_dense(o, p["wo"]), KVCache(k, v, k_sc, v_sc)
 
 
 # ---------------------------------------------------------------------------
@@ -386,7 +433,8 @@ def gqa_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
 # ---------------------------------------------------------------------------
 def gqa_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
               start: jax.Array, n_live: jax.Array, *,
-              grouped: bool = False) -> tuple[jax.Array, KVCache]:
+              grouped: bool = False,
+              codec: CacheCodec | None = None) -> tuple[jax.Array, KVCache]:
     """W-lane chunk/decode attention against the dense [B, S_max] cache.
 
     ``x`` is [B, W, d]: lane ``l`` of slot ``b`` sits at cache position
@@ -400,6 +448,7 @@ def gqa_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
     prefill switches to the streaming softmax, whose accumulation order
     this unfused path does not mirror).
     """
+    codec = codec or FLOAT_CODEC
     b_, w, _ = x.shape
     positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
     q, k_new, v_new = gqa_qkv(x, p, cfg, positions)
@@ -408,25 +457,31 @@ def gqa_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
     # lane ever collides with a live write
     pos = jnp.where(masking.lane_mask(w, n_live), positions, s_max)
     rows = jnp.arange(b_)[:, None]
-    k = cache.k.at[rows, pos].set(k_new.astype(cache.k.dtype))
-    v = cache.v.at[rows, pos].set(v_new.astype(cache.v.dtype))
+    kq, ks = codec.store(k_new, cache.k.dtype)
+    vq, vs = codec.store(v_new, cache.v.dtype)
+    k, k_sc = cache_put(cache.k, cache.k_scale, (rows, pos), kq, ks)
+    v, v_sc = cache_put(cache.v, cache.v_scale, (rows, pos), vq, vs)
     live = masking.chunk_causal_mask(s_max, start, w)
-    o = _gqa_attend(q, k, v, live, cfg, grouped)
-    return apply_dense(o, p["wo"]), KVCache(k, v)
+    o = _gqa_attend(q, codec.load(k, k_sc, x.dtype),
+                    codec.load(v, v_sc, x.dtype), live, cfg, grouped)
+    return apply_dense(o, p["wo"]), KVCache(k, v, k_sc, v_sc)
 
 
 def gqa_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
                     start: jax.Array, n_live: jax.Array,
                     block_tables: jax.Array, *, grouped: bool = False,
                     impl: str = "gather",
-                    interpret: bool | None = None
+                    interpret: bool | None = None,
+                    codec: CacheCodec | None = None
                     ) -> tuple[jax.Array, KVCache]:
     """W-lane chunk/decode attention against the pooled block cache.
 
     ``impl="gather"`` materializes the block-table view and reuses the
     dense contraction (bit-identical to ``gqa_mixed``); ``"pallas"``
-    streams pool blocks through the fused chunked-prefill kernel.
+    streams pool blocks through the fused chunked-prefill kernel (the
+    int8 codec's scales ride its scalar-prefetched block-table walk).
     """
+    codec = codec or FLOAT_CODEC
     b_, w, _ = x.shape
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     bs = cache.k.shape[1]
@@ -436,31 +491,41 @@ def gqa_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: KVCache,
     # dead lanes -> index t_max -> the null block absorbs them
     idx_w = jnp.where(masking.lane_mask(w, n_live), positions, t_max)
     blk, off = paged_write_slot(idx_w, block_tables, bs)
-    k = cache.k.at[blk, off].set(k_new.astype(cache.k.dtype))
-    v = cache.v.at[blk, off].set(v_new.astype(cache.v.dtype))
+    kq, ks = codec.store(k_new, cache.k.dtype)
+    vq, vs = codec.store(v_new, cache.v.dtype)
+    k, k_sc = cache_put(cache.k, cache.k_scale, (blk, off), kq, ks)
+    v, v_sc = cache_put(cache.v, cache.v_scale, (blk, off), vq, vs)
     if impl == "pallas":
         from repro.kernels.chunked_prefill import chunked_prefill_attention
         if interpret is None:
             interpret = interpret_default()
         o = chunked_prefill_attention(q, k, v, block_tables, start,
+                                      k_scale=k_sc, v_scale=v_sc,
                                       interpret=interpret)
         o = o.reshape(b_, w, cfg.num_heads * hd)
     else:
-        kg = k[block_tables].reshape(b_, t_max, kv, hd)
-        vg = v[block_tables].reshape(b_, t_max, kv, hd)
+        kg = gather_view(codec, k, k_sc, block_tables,
+                          (b_, t_max, kv, hd), x.dtype)
+        vg = gather_view(codec, v, v_sc, block_tables,
+                          (b_, t_max, kv, hd), x.dtype)
         live = masking.chunk_causal_mask(t_max, start, w)
         o = _gqa_attend(q, kg, vg, live, cfg, grouped)
-    return apply_dense(o, p["wo"]), KVCache(k, v)
+    return apply_dense(o, p["wo"]), KVCache(k, v, k_sc, v_sc)
 
 
 # ---------------------------------------------------------------------------
 # MLA — multi-head latent attention (DeepSeek-V3)
 # ---------------------------------------------------------------------------
 class MLACache(NamedTuple):
-    """Latent cache: the compressed kv + shared rope key (paper-faithful MLA)."""
+    """Latent cache: the compressed kv + shared rope key (paper-faithful
+    MLA).  Under the int8 codec the values are int8 and one f32 scale per
+    cached position rides in ``c_scale``/``r_scale`` (None in compute
+    mode — see ``KVCache``)."""
 
     c_kv: jax.Array    # [B, S_max, kv_lora]
     k_rope: jax.Array  # [B, S_max, rope_dim]
+    c_scale: jax.Array | None = None
+    r_scale: jax.Array | None = None
 
 
 def build_mla(b, cfg: ArchConfig) -> dict:
@@ -546,9 +611,11 @@ def _mla_attend(x: jax.Array, p: dict, cfg: ArchConfig, q_nope: jax.Array,
 
 
 def mla_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
-               cache_index: jax.Array) -> tuple[jax.Array, MLACache]:
+               cache_index: jax.Array,
+               codec: CacheCodec | None = None) -> tuple[jax.Array, MLACache]:
     """Absorbed-matmul MLA decode: score and value contraction happen in the
     latent space, so per-step FLOPs/bytes scale with kv_lora_rank."""
+    codec = codec or FLOAT_CODEC
     m, h = cfg.mla, cfg.num_heads
     b_, one, _ = x.shape
     idx_vec = as_index_vector(cache_index, b_)
@@ -556,20 +623,27 @@ def mla_decode(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
     q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
     c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
     rows = jnp.arange(b_)
-    c_kv = cache.c_kv.at[rows, idx_vec].set(c_new[:, 0].astype(cache.c_kv.dtype))
-    k_rope = cache.k_rope.at[rows, idx_vec].set(
-        kr_new[:, 0].astype(cache.k_rope.dtype))
+    cq, cs = codec.store(c_new[:, 0], cache.c_kv.dtype)
+    rq, rs = codec.store(kr_new[:, 0], cache.k_rope.dtype)
+    c_kv, c_sc = cache_put(cache.c_kv, cache.c_scale, (rows, idx_vec),
+                            cq, cs)
+    k_rope, r_sc = cache_put(cache.k_rope, cache.r_scale, (rows, idx_vec),
+                              rq, rs)
     s_max = c_kv.shape[1]
     live = (jnp.arange(s_max)[None] <= idx_vec[:, None])[:, None, None, :]
-    out = _mla_attend(x, p, cfg, q_nope, q_rope, c_kv, k_rope, live)
-    return out, MLACache(c_kv, k_rope)
+    out = _mla_attend(x, p, cfg, q_nope, q_rope,
+                      codec.load(c_kv, c_sc, x.dtype),
+                      codec.load(k_rope, r_sc, x.dtype), live)
+    return out, MLACache(c_kv, k_rope, c_sc, r_sc)
 
 
 def mla_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
-                     cache_index: jax.Array, block_tables: jax.Array
+                     cache_index: jax.Array, block_tables: jax.Array,
+                     codec: CacheCodec | None = None
                      ) -> tuple[jax.Array, MLACache]:
     """MLA decode against pooled latent blocks ([NB, bs, rank] c_kv and
     [NB, bs, rope_dim] k_rope addressed through the same block tables)."""
+    codec = codec or FLOAT_CODEC
     m, h = cfg.mla, cfg.num_heads
     b_, one, _ = x.shape
     bs = cache.c_kv.shape[1]
@@ -578,22 +652,28 @@ def mla_decode_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
     q_nope, q_rope = _mla_q(x, p, m, h, positions, cfg.rope_theta)
     c_new, kr_new = _mla_latent(x, p, m, positions, cfg.rope_theta)
     blk, off = paged_write_slot(idx_vec, block_tables, bs)
-    c_kv = cache.c_kv.at[blk, off].set(c_new[:, 0].astype(cache.c_kv.dtype))
-    k_rope = cache.k_rope.at[blk, off].set(
-        kr_new[:, 0].astype(cache.k_rope.dtype))
+    cq, cs = codec.store(c_new[:, 0], cache.c_kv.dtype)
+    rq, rs = codec.store(kr_new[:, 0], cache.k_rope.dtype)
+    c_kv, c_sc = cache_put(cache.c_kv, cache.c_scale, (blk, off), cq, cs)
+    k_rope, r_sc = cache_put(cache.k_rope, cache.r_scale, (blk, off),
+                              rq, rs)
     t_max = block_tables.shape[1] * bs
-    ckv_g = c_kv[block_tables].reshape(b_, t_max, m.kv_lora_rank)
-    kr_g = k_rope[block_tables].reshape(b_, t_max, m.qk_rope_head_dim)
+    ckv_g = gather_view(codec, c_kv, c_sc, block_tables,
+                         (b_, t_max, m.kv_lora_rank), x.dtype)
+    kr_g = gather_view(codec, k_rope, r_sc, block_tables,
+                        (b_, t_max, m.qk_rope_head_dim), x.dtype)
     live = (jnp.arange(t_max)[None] <= idx_vec[:, None])[:, None, None, :]
     out = _mla_attend(x, p, cfg, q_nope, q_rope, ckv_g, kr_g, live)
-    return out, MLACache(c_kv, k_rope)
+    return out, MLACache(c_kv, k_rope, c_sc, r_sc)
 
 
 def mla_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
-              start: jax.Array, n_live: jax.Array
+              start: jax.Array, n_live: jax.Array,
+              codec: CacheCodec | None = None
               ) -> tuple[jax.Array, MLACache]:
     """W-lane chunk/decode MLA against the dense latent cache (absorbed
     contraction; see ``gqa_mixed`` for the lane protocol)."""
+    codec = codec or FLOAT_CODEC
     m, h = cfg.mla, cfg.num_heads
     b_, w, _ = x.shape
     positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
@@ -602,17 +682,25 @@ def mla_mixed(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
     s_max = cache.c_kv.shape[1]
     pos = jnp.where(masking.lane_mask(w, n_live), positions, s_max)
     rows = jnp.arange(b_)[:, None]
-    c_kv = cache.c_kv.at[rows, pos].set(c_new.astype(cache.c_kv.dtype))
-    k_rope = cache.k_rope.at[rows, pos].set(kr_new.astype(cache.k_rope.dtype))
+    cq, cs = codec.store(c_new, cache.c_kv.dtype)
+    rq, rs = codec.store(kr_new, cache.k_rope.dtype)
+    c_kv, c_sc = cache_put(cache.c_kv, cache.c_scale, (rows, pos), cq, cs)
+    k_rope, r_sc = cache_put(cache.k_rope, cache.r_scale, (rows, pos),
+                              rq, rs)
     live = masking.chunk_causal_mask(s_max, start, w)[:, None]  # [B,1,W,S]
-    out = _mla_attend(x, p, cfg, q_nope, q_rope, c_kv, k_rope, live)
-    return out, MLACache(c_kv, k_rope)
+    out = _mla_attend(x, p, cfg, q_nope, q_rope,
+                      codec.load(c_kv, c_sc, x.dtype),
+                      codec.load(k_rope, r_sc, x.dtype), live)
+    return out, MLACache(c_kv, k_rope, c_sc, r_sc)
 
 
 def mla_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
                     start: jax.Array, n_live: jax.Array,
-                    block_tables: jax.Array) -> tuple[jax.Array, MLACache]:
+                    block_tables: jax.Array,
+                    codec: CacheCodec | None = None
+                    ) -> tuple[jax.Array, MLACache]:
     """W-lane chunk/decode MLA against the pooled latent block cache."""
+    codec = codec or FLOAT_CODEC
     m, h = cfg.mla, cfg.num_heads
     b_, w, _ = x.shape
     bs = cache.c_kv.shape[1]
@@ -622,10 +710,15 @@ def mla_mixed_paged(x: jax.Array, p: dict, cfg: ArchConfig, cache: MLACache,
     t_max = block_tables.shape[1] * bs
     idx_w = jnp.where(masking.lane_mask(w, n_live), positions, t_max)
     blk, off = paged_write_slot(idx_w, block_tables, bs)
-    c_kv = cache.c_kv.at[blk, off].set(c_new.astype(cache.c_kv.dtype))
-    k_rope = cache.k_rope.at[blk, off].set(kr_new.astype(cache.k_rope.dtype))
-    ckv_g = c_kv[block_tables].reshape(b_, t_max, m.kv_lora_rank)
-    kr_g = k_rope[block_tables].reshape(b_, t_max, m.qk_rope_head_dim)
+    cq, cs = codec.store(c_new, cache.c_kv.dtype)
+    rq, rs = codec.store(kr_new, cache.k_rope.dtype)
+    c_kv, c_sc = cache_put(cache.c_kv, cache.c_scale, (blk, off), cq, cs)
+    k_rope, r_sc = cache_put(cache.k_rope, cache.r_scale, (blk, off),
+                              rq, rs)
+    ckv_g = gather_view(codec, c_kv, c_sc, block_tables,
+                         (b_, t_max, m.kv_lora_rank), x.dtype)
+    kr_g = gather_view(codec, k_rope, r_sc, block_tables,
+                        (b_, t_max, m.qk_rope_head_dim), x.dtype)
     live = masking.chunk_causal_mask(t_max, start, w)[:, None]
     out = _mla_attend(x, p, cfg, q_nope, q_rope, ckv_g, kr_g, live)
-    return out, MLACache(c_kv, k_rope)
+    return out, MLACache(c_kv, k_rope, c_sc, r_sc)

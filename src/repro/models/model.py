@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.kv_quant import CacheCodec
 from repro.core.paging import PagingConfig
-from repro.core.spec import CHUNKABLE_FAMILIES
+from repro.core.spec import CHUNKABLE_FAMILIES, KV_QUANTIZABLE_FAMILIES
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import backend
@@ -78,16 +79,22 @@ class ModelOptions:
     # flash-decode loop).  Only consulted when decode_step receives
     # block tables.
     paged_attn_impl: str = "gather"
+    # KV-cache storage codec: "compute" (bf16 values, historical) or
+    # "int8" (quantize-on-write with per-row f32 scales; see
+    # core.kv_quant).  Lowered from MemorySpec.kv_dtype by from_spec.
+    kv_dtype: str = "compute"
 
     @classmethod
-    def from_execution(cls, ex) -> "ModelOptions":
-        """Lower a ``core.spec.ExecutionSpec`` onto the zoo's build-time
-        options — the one place the two vocabularies meet."""
+    def from_execution(cls, ex, memory=None) -> "ModelOptions":
+        """Lower a ``core.spec.ExecutionSpec`` (and optionally the
+        ``MemorySpec`` holding the cache codec) onto the zoo's build-time
+        options — the one place the vocabularies meet."""
         return cls(param_dtype=ex.param_dtype,
                    compute_dtype=ex.compute_dtype,
                    grouped_gqa=ex.grouped_gqa,
                    matmul_backend=ex.matmul_backend,
-                   paged_attn_impl=ex.paged_attn_impl)
+                   paged_attn_impl=ex.paged_attn_impl,
+                   kv_dtype="compute" if memory is None else memory.kv_dtype)
 
 
 class Model:
@@ -98,8 +105,15 @@ class Model:
     @classmethod
     def from_spec(cls, spec) -> "Model":
         """Build the zoo model a ``core.spec.RuntimeSpec`` describes; every
-        execution knob is read from ``spec.execution`` (single source)."""
-        return cls(spec.arch, ModelOptions.from_execution(spec.execution))
+        execution knob is read from ``spec.execution`` (single source),
+        the cache codec from ``spec.memory.kv_dtype``."""
+        return cls(spec.arch, ModelOptions.from_execution(spec.execution,
+                                                          spec.memory))
+
+    @property
+    def codec(self) -> CacheCodec:
+        """The cache codec this model's decode state uses."""
+        return CacheCodec(self.opt.kv_dtype)
 
     def _mm_ctx(self):
         if self.opt.matmul_backend != "xla":
@@ -496,25 +510,35 @@ class Model:
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, abstract: bool = False,
                    paging: "PagingConfig | None" = None):
-        """Decode cache in either layout.
+        """Decode cache in either layout and either storage codec.
 
         ``paging=None`` (dense): per-slot ``[batch, max_len, ...]`` rows —
         the training/test layout.  With a ``core.paging.PagingConfig``,
         returns the pooled block layout ``[num_blocks+1, block_size, ...]``
         shared by all slots (row 0 is the null block); ``batch``/``max_len``
         then only bound the serving engine's block tables, not the pool.
+
+        With ``ModelOptions(kv_dtype="int8")`` the KV/latent values are
+        int8 and per-row f32 scale arrays ride in the same pytree
+        (``core.kv_quant``); supported for the attention-cache families
+        only.
         """
         cfg = self.cfg
-        kd = jnp.bfloat16
+        codec = self.codec
+        kd = codec.storage_dtype(jnp.bfloat16)
+        if codec.quantized and cfg.family not in KV_QUANTIZABLE_FAMILIES:
+            raise ValueError(
+                f"kv_dtype='int8' is unsupported for family {cfg.family!r} "
+                "(only KV/latent attention caches are quantized); use "
+                "kv_dtype='compute'")
         if paging is not None:
-            return self._init_paged_cache(paging, kd, abstract)
+            return self._init_paged_cache(paging, abstract)
 
         def kv(n_layers, s, n_kv, hd):
             shape = (n_layers, batch, s, n_kv, hd)
-            if abstract:
-                return KVCache(jax.ShapeDtypeStruct(shape, kd),
-                               jax.ShapeDtypeStruct(shape, kd))
-            return KVCache(jnp.zeros(shape, kd), jnp.zeros(shape, kd))
+            kvals, ksc = codec.cache_arrays(shape, abstract=abstract)
+            vvals, vsc = codec.cache_arrays(shape, abstract=abstract)
+            return KVCache(kvals, vvals, ksc, vsc)
 
         if cfg.family == "ssm":
             st = ssm.ssm_init_state(cfg, batch, abstract)
@@ -523,11 +547,13 @@ class Model:
                 else jnp.broadcast_to(l, (cfg.num_layers,) + l.shape).copy(), st)
         if cfg.mla is not None:
             m = cfg.mla
-            shapes = [(cfg.num_layers, batch, max_len, m.kv_lora_rank),
-                      (cfg.num_layers, batch, max_len, m.qk_rope_head_dim)]
-            if abstract:
-                return MLACache(*[jax.ShapeDtypeStruct(s, kd) for s in shapes])
-            return MLACache(*[jnp.zeros(s, kd) for s in shapes])
+            cv, cs = codec.cache_arrays(
+                (cfg.num_layers, batch, max_len, m.kv_lora_rank),
+                abstract=abstract)
+            rv, rs = codec.cache_arrays(
+                (cfg.num_layers, batch, max_len, m.qk_rope_head_dim),
+                abstract=abstract)
+            return MLACache(cv, rv, cs, rs)
         if cfg.family == "hybrid":
             caches = []
             for kind in self._hybrid_kinds():
@@ -552,26 +578,28 @@ class Model:
         return kv(cfg.num_layers, max_len, cfg.num_kv_heads,
                   cfg.resolved_head_dim)
 
-    def _init_paged_cache(self, paging, kd, abstract: bool):
+    def _init_paged_cache(self, paging, abstract: bool):
         cfg = self.cfg
+        codec = self.codec
         if cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError(
                 f"paged KV cache unsupported for family {cfg.family!r} "
                 "(SSM / rolling-window / enc-dec state is not paged)")
 
-        def mk(*shapes):
-            if abstract:
-                return [jax.ShapeDtypeStruct(s, kd) for s in shapes]
-            return [jnp.zeros(s, kd) for s in shapes]
-
         pb, bs = paging.pool_blocks, paging.block_size
         if cfg.mla is not None:
             m = cfg.mla
-            return MLACache(*mk((cfg.num_layers, pb, bs, m.kv_lora_rank),
-                                (cfg.num_layers, pb, bs, m.qk_rope_head_dim)))
+            cv, cs = codec.cache_arrays(
+                (cfg.num_layers, pb, bs, m.kv_lora_rank), abstract=abstract)
+            rv, rs = codec.cache_arrays(
+                (cfg.num_layers, pb, bs, m.qk_rope_head_dim),
+                abstract=abstract)
+            return MLACache(cv, rv, cs, rs)
         shape = (cfg.num_layers, pb, bs, cfg.num_kv_heads,
                  cfg.resolved_head_dim)
-        return KVCache(*mk(shape, shape))
+        kvals, ksc = codec.cache_arrays(shape, abstract=abstract)
+        vvals, vsc = codec.cache_arrays(shape, abstract=abstract)
+        return KVCache(kvals, vvals, ksc, vsc)
 
     @_with_backend
     def prefill(self, params: dict, batch: dict, max_len: int):
@@ -634,10 +662,14 @@ class Model:
                 hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
                 if cfg.mla is not None:
                     o, st = attn.mla_prefill(hn, lp["attn"], cfg,
-                                             positions=positions, max_len=max_len)
+                                             positions=positions,
+                                             max_len=max_len,
+                                             codec=self.codec)
                 else:
                     o, st = attn.gqa_prefill(hn, lp["attn"], cfg,
-                                             positions=positions, max_len=max_len)
+                                             positions=positions,
+                                             max_len=max_len,
+                                             codec=self.codec)
                 return ffn_half(h + o, lp), st
 
             pref = []
@@ -687,10 +719,11 @@ class Model:
                 hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
                 if block_tables is not None:
                     o, c2 = attn.mla_decode_paged(hn, lp["attn"], cfg, c,
-                                                  cache_index, block_tables)
+                                                  cache_index, block_tables,
+                                                  codec=self.codec)
                 else:
                     o, c2 = attn.mla_decode(hn, lp["attn"], cfg, c,
-                                            cache_index)
+                                            cache_index, codec=self.codec)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:
@@ -738,11 +771,12 @@ class Model:
                     o, c2 = attn.gqa_decode_paged(
                         hn, lp["attn"], cfg, c, cache_index, block_tables,
                         grouped=self.opt.grouped_gqa,
-                        impl=self.opt.paged_attn_impl)
+                        impl=self.opt.paged_attn_impl, codec=self.codec)
                 else:
                     o, c2 = attn.gqa_decode(hn, lp["attn"], cfg, c,
                                             cache_index,
-                                            grouped=self.opt.grouped_gqa)
+                                            grouped=self.opt.grouped_gqa,
+                                            codec=self.codec)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:
@@ -798,10 +832,11 @@ class Model:
                 hn = layers.apply_norm(h, lp["ln1"], cfg.norm)
                 if block_tables is not None:
                     o, c2 = attn.mla_mixed_paged(hn, lp["attn"], cfg, c,
-                                                 start, n_live, block_tables)
+                                                 start, n_live, block_tables,
+                                                 codec=self.codec)
                 else:
                     o, c2 = attn.mla_mixed(hn, lp["attn"], cfg, c,
-                                           start, n_live)
+                                           start, n_live, codec=self.codec)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:
@@ -817,11 +852,12 @@ class Model:
                     o, c2 = attn.gqa_mixed_paged(
                         hn, lp["attn"], cfg, c, start, n_live, block_tables,
                         grouped=self.opt.grouped_gqa,
-                        impl=self.opt.paged_attn_impl)
+                        impl=self.opt.paged_attn_impl, codec=self.codec)
                 else:
                     o, c2 = attn.gqa_mixed(hn, lp["attn"], cfg, c,
                                            start, n_live,
-                                           grouped=self.opt.grouped_gqa)
+                                           grouped=self.opt.grouped_gqa,
+                                           codec=self.codec)
                 h = h + o
                 hn = layers.apply_norm(h, lp["ln2"], cfg.norm)
                 if "moe" in lp:

@@ -57,6 +57,13 @@ packs any dense-family model into the device-resident weight table, each
 slot carries its model's topology registers inside ``SlotState``, and the
 one fused decode step serves a mixed fleet — continuous batching *across
 models*, zero retraces.
+
+Fully-quantized serving: ``spec.execution.quant="int8"`` quantizes the
+weights (including the fleet's weight table — int8 values + f32 scales
+per member) and ``spec.memory.kv_dtype="int8"`` swaps the KV cache for
+the ``core.kv_quant`` codec (quantize-on-write int8 with per-row scales,
+~2x concurrent capacity at equal HBM) in every mode — dense, paged,
+chunked, fleet.  See README "Fully-quantized serving".
 """
 from __future__ import annotations
 
@@ -245,20 +252,23 @@ class ServingEngine:
         if spec.maxima is not None:
             # multi-topology mode: one compiled step at the maxima serves a
             # fleet of models selected by per-slot registers (add_model)
-            if spec.execution.quant == "int8":
-                raise ValueError(
-                    "quant='int8' is not yet supported in multi-topology "
-                    "mode (the fabric's model table packs float weights)")
             if spec.execution.matmul_backend != "xla":
                 raise ValueError(
                     f"matmul_backend={spec.execution.matmul_backend!r} is "
                     "not yet supported in multi-topology mode: the fabric's "
                     "per-slot weight gathers do not route through the "
-                    "tiled-kernel backend (use the default 'xla')")
+                    "tiled-kernel backend (use the default 'xla'; for "
+                    "quantized fleet serving use "
+                    "ExecutionSpec(quant='int8') — the fabric packs an "
+                    "int8 weight table itself — see README "
+                    "'Fully-quantized serving')")
             self.fabric: DecodeFabric | None = DecodeFabric(
                 spec.maxima, max_models, cfg,
                 compute_dtype=spec.execution.compute_dtype,
-                param_dtype=spec.execution.param_dtype)
+                param_dtype=spec.execution.param_dtype,
+                quant=spec.execution.quant,
+                quant_min_size=spec.execution.quant_min_size,
+                kv_dtype=spec.memory.kv_dtype)
             self.fabric.check_member(cfg)
             self.model: Model | None = None
             self._traced_model: Model | None = None
@@ -275,11 +285,13 @@ class ServingEngine:
             # them)
             if model is None:
                 self.model = Model.from_spec(spec)
-            elif model.opt.matmul_backend == self.matmul_backend:
+            elif model.opt.matmul_backend == self.matmul_backend \
+                    and model.opt.kv_dtype == spec.memory.kv_dtype:
                 self.model = model
             else:
                 self.model = Model(cfg, dataclasses.replace(
-                    model.opt, matmul_backend=self.matmul_backend))
+                    model.opt, matmul_backend=self.matmul_backend,
+                    kv_dtype=spec.memory.kv_dtype))
             self._traced_model = self.model
 
         # ---- cache layout -------------------------------------------------
@@ -375,7 +387,8 @@ class ServingEngine:
             return
         if self.spec.execution.quant == "int8":
             from repro.core.serve_quant import quantize_params
-            params = quantize_params(params)
+            params = quantize_params(
+                params, min_size=self.spec.execution.quant_min_size)
         self.params = params
         self.cache = self.model.init_cache(self.max_batch, self.max_len,
                                            paging=self.paging)

@@ -42,7 +42,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import masking
+from repro.core.kv_quant import CacheCodec, cache_put, gather_view
 from repro.core.paging import PagingConfig
+from repro.core.quant import DEFAULT_QUANT_MIN_SIZE, QTensor
 from repro.core.registers import Maxima
 from repro.models.attention import KVCache, paged_write_slot
 from repro.models.layers import activate, apply_rope, is_gated
@@ -76,7 +78,10 @@ class DecodeFabric:
     def __init__(self, maxima: Maxima, max_models: int,
                  template: FabricTemplate | ArchConfig,
                  compute_dtype: Any = jnp.bfloat16,
-                 param_dtype: Any = jnp.float32):
+                 param_dtype: Any = jnp.float32,
+                 quant: str = "none",
+                 quant_min_size: int = DEFAULT_QUANT_MIN_SIZE,
+                 kv_dtype: str = "compute"):
         if isinstance(template, ArchConfig):
             template = FabricTemplate.of(template)
         if template.head_dim != maxima.head_dim_max:
@@ -86,11 +91,18 @@ class DecodeFabric:
                 "synthesis (RoPE pairs by head_dim, so it cannot be a "
                 "runtime register); synthesize at the fleet's common "
                 "head_dim")
+        if quant not in ("none", "int8"):
+            raise ValueError(f"DecodeFabric quant={quant!r} is not one of "
+                             "('none', 'int8')")
         self.mx = maxima
         self.max_models = max_models
         self.template = template
         self.compute_dtype = compute_dtype
         self.param_dtype = param_dtype
+        self.quant = quant
+        self.quant_min_size = quant_min_size
+        # the cache codec: int8 kv quantize-on-write with per-row scales
+        self.codec = CacheCodec(kv_dtype)
         self.hd = template.head_dim
 
     # ------------------------------------------------------------------
@@ -137,6 +149,29 @@ class DecodeFabric:
         return [model_id, arch.num_heads, arch.num_layers, arch.d_model,
                 arch.d_ff, arch.vocab_size]
 
+    def _quant_names(self) -> frozenset:
+        """Table leaves stored as int8 ``QTensor``s under quant='int8'.
+        Decided on the table (maxima-padded) per-member sizes — the
+        table's structure is shared by every member, so eligibility
+        cannot vary per member: a small fleet member may get int8
+        weights that its single-topology ``quantize_params`` (which sees
+        the unpadded leaf sizes) would leave float.  Stream parity with
+        solo engines therefore holds at any ``quant_min_size`` that
+        selects the same leaves on both sides (0 selects everything).
+        Leaves under the floor stay float (biases and norms always
+        do)."""
+        if self.quant != "int8":
+            return frozenset()
+        mx, L = self.mx, self.mx.layers_enc_max
+        D, F, V, HO = (mx.d_model_max, mx.d_ff_max, mx.vocab,
+                       mx.heads_max * self.hd)
+        sizes = {"embed": V * D, "lm_head": V * D,
+                 "wq": L * D * HO, "wk": L * D * HO, "wv": L * D * HO,
+                 "wo": L * HO * D, "w1": L * D * F, "wg": L * D * F,
+                 "w2": L * F * D}
+        return frozenset(n for n, sz in sizes.items()
+                         if sz >= self.quant_min_size)
+
     # ------------------------------------------------------------------
     # Model table (synthesis-time buffers + weight loading units)
     # ------------------------------------------------------------------
@@ -152,20 +187,38 @@ class DecodeFabric:
         D, F, V, HO = (mx.d_model_max, mx.d_ff_max, mx.vocab,
                        mx.heads_max * self.hd)
         z = lambda *s: jnp.zeros(s, self.param_dtype)
+        qn = self._quant_names()
+
+        def kern(name, *shape):
+            # int8 values + per-(stack, output-column) f32 scales
+            if name in qn:
+                return QTensor(jnp.zeros(shape, jnp.int8),
+                               jnp.zeros(shape[:-2] + (1, shape[-1]),
+                                         jnp.float32))
+            return z(*shape)
+
+        def vocab_table(name, *shape):
+            # int8 values + per-row f32 scales (embed / lm_head)
+            if name in qn:
+                return QTensor(jnp.zeros(shape, jnp.int8),
+                               jnp.zeros(shape[:-1] + (1,), jnp.float32))
+            return z(*shape)
+
         layers = {
             "ln1": self._norm_shape(M, L),
-            "wq": z(M, L, D, HO), "bq": z(M, L, HO),
-            "wk": z(M, L, D, HO), "bk": z(M, L, HO),
-            "wv": z(M, L, D, HO), "bv": z(M, L, HO),
-            "wo": z(M, L, HO, D),
+            "wq": kern("wq", M, L, D, HO), "bq": z(M, L, HO),
+            "wk": kern("wk", M, L, D, HO), "bk": z(M, L, HO),
+            "wv": kern("wv", M, L, D, HO), "bv": z(M, L, HO),
+            "wo": kern("wo", M, L, HO, D),
             "ln2": self._norm_shape(M, L),
-            "w1": z(M, L, D, F), "b1": z(M, L, F),
-            "w2": z(M, L, F, D), "b2": z(M, L, D),
+            "w1": kern("w1", M, L, D, F), "b1": z(M, L, F),
+            "w2": kern("w2", M, L, F, D), "b2": z(M, L, D),
         }
         if is_gated(self.template.activation):
-            layers["wg"] = z(M, L, D, F)
+            layers["wg"] = kern("wg", M, L, D, F)
             layers["bg"] = z(M, L, F)
-        return {"embed": z(M, V, D), "lm_head": z(M, V, D),
+        return {"embed": vocab_table("embed", M, V, D),
+                "lm_head": vocab_table("lm_head", M, V, D),
                 "final_norm": self._norm_shape(M), "layers": layers}
 
     def pack_member(self, arch: ArchConfig, params: dict) -> dict:
@@ -231,10 +284,32 @@ class DecodeFabric:
                 bias_or_zeros(lp["ffn"]["wg"], arch.d_ff), L, F)
         lm = params["embed"]["table"] if arch.tie_embeddings \
             else params["lm_head"]["table"]
-        return {"embed": pad(params["embed"]["table"], mx.vocab, D),
-                "lm_head": pad(lm, mx.vocab, D),
-                "final_norm": norm_row(params["final_norm"], D),
-                "layers": row_layers}
+        row = {"embed": pad(params["embed"]["table"], mx.vocab, D),
+               "lm_head": pad(lm, mx.vocab, D),
+               "final_norm": norm_row(params["final_norm"], D),
+               "layers": row_layers}
+        return self._quantize_row(row)
+
+    def _quantize_row(self, row: dict) -> dict:
+        """Symmetric-int8-quantize the planned leaves of one packed row
+        via the ONE quantizer (``core.serve_quant.quantize_leaf``:
+        per-output-column scales for kernels, per-row for the vocab
+        tables).  Zero padding never moves a scale, so on leaves
+        quantized on both sides a member's values equal its
+        single-topology ``quantize_params`` values on the live lanes
+        (see ``_quant_names`` for the eligibility caveat)."""
+        qn = self._quant_names()
+        if not qn:
+            return row
+        from repro.core.serve_quant import quantize_leaf
+        for name in ("embed", "lm_head"):
+            if name in qn:
+                row[name] = quantize_leaf(row[name], "table")
+        for name in ("wq", "wk", "wv", "wo", "w1", "w2", "wg"):
+            if name in qn and name in row["layers"]:
+                row["layers"][name] = quantize_leaf(row["layers"][name],
+                                                    "kernel")
+        return row
 
     @staticmethod
     def insert_model(table: dict, row: dict, model_id: int) -> dict:
@@ -251,8 +326,9 @@ class DecodeFabric:
             shape = (L, paging.pool_blocks, paging.block_size, H, hd)
         else:
             shape = (L, batch, max_len, H, hd)
-        return KVCache(jnp.zeros(shape, jnp.bfloat16),
-                       jnp.zeros(shape, jnp.bfloat16))
+        kv, ks = self.codec.cache_arrays(shape)
+        vv, vs = self.codec.cache_arrays(shape)
+        return KVCache(kv, vv, ks, vs)
 
     # ------------------------------------------------------------------
     # Masked compute
@@ -264,16 +340,31 @@ class DecodeFabric:
                                               d_live)
 
     @staticmethod
-    def _mm(x: jax.Array, w: jax.Array, b: jax.Array | None = None
-            ) -> jax.Array:
+    def _mm(x: jax.Array, w, b: jax.Array | None = None) -> jax.Array:
         """Per-slot dense: x [B,S,Din] @ w [B,Din,Dout] (+ b [B,Dout]),
-        bf16 weights / f32 accumulate — the ``backend.matmul`` contract."""
-        wb = w.astype(x.dtype)
+        bf16 weights / f32 accumulate — the ``backend.matmul`` contract.
+        ``w`` may be an int8 ``QTensor`` (quant='int8' fleet table):
+        dequantized at the compute dtype exactly like ``layers.dense``'s
+        serving path, so fleet streams track the zoo model's."""
+        if isinstance(w, QTensor):
+            wb = w.values.astype(x.dtype) * w.scale.astype(x.dtype)
+        else:
+            wb = w.astype(x.dtype)
         y = jnp.einsum("bsd,bdo->bso", x.astype(jnp.float32),
                        wb.astype(jnp.float32)).astype(x.dtype)
         if b is not None:
             y = y + b.astype(y.dtype)[:, None]
         return y
+
+    def _embed_rows(self, table: dict, mid, tokens) -> jax.Array:
+        """Token embeddings gathered by (model row, token id); an int8
+        table dequants with its gathered per-row scales (mirrors
+        ``layers.embed``)."""
+        emb = table["embed"]
+        if isinstance(emb, QTensor):
+            return emb.values[mid, tokens].astype(self.compute_dtype) \
+                * emb.scale[mid, tokens].astype(self.compute_dtype)
+        return emb[mid, tokens].astype(self.compute_dtype)
 
     def _qkv(self, xn: jax.Array, lp: dict, positions: jax.Array,
              he: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -314,9 +405,13 @@ class DecodeFabric:
                  d_live: jax.Array, v_live: jax.Array) -> jax.Array:
         fn = jax.tree.map(lambda l: l[mid], table["final_norm"])
         xn = self._norm(x, fn, d_live)
-        lm = table["lm_head"][mid]                       # [B, V, D]
-        logits = jnp.einsum("bsd,bvd->bsv", xn.astype(jnp.float32),
-                            lm.astype(jnp.float32))
+        lm = table["lm_head"]
+        if isinstance(lm, QTensor):                      # [B, V, D] int8
+            lmf = lm.values[mid].astype(jnp.float32) \
+                * lm.scale[mid].astype(jnp.float32)
+        else:
+            lmf = lm[mid].astype(jnp.float32)            # [B, V, D]
+        logits = jnp.einsum("bsd,bvd->bsv", xn.astype(jnp.float32), lmf)
         vm = jnp.arange(self.mx.vocab)[None, None, :] < v_live[:, None, None]
         # dead vocab lanes to NEG_INF so per-slot sampling (argmax /
         # categorical) can never pick a token outside the live vocab
@@ -340,7 +435,7 @@ class DecodeFabric:
         f_live, v_live = topo[REG_DFF][None], topo[REG_VOCAB][None]
         l_live = topo[REG_LAYERS][None]
         S = tokens.shape[1]
-        emb = table["embed"][mid[0]].astype(self.compute_dtype)[tokens]
+        emb = self._embed_rows(table, mid[0], tokens)
         x = emb * masking.slot_mask(mx.d_model_max, d_live, emb.dtype)[:, None]
         positions = jnp.arange(S, dtype=jnp.int32)[None]
         he = masking.slot_mask(mx.heads_max, h_live)[:, None, :, None] \
@@ -365,12 +460,15 @@ class DecodeFabric:
             h2 = h1 + f
             out = jnp.where((i < l_live)[:, None, None], h2, h)
             pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
-            return out, (jnp.pad(k.astype(jnp.bfloat16), pad),
-                         jnp.pad(v.astype(jnp.bfloat16), pad))
+            kq, ksc = self.codec.store(k, jnp.bfloat16)
+            vq, vsc = self.codec.store(v, jnp.bfloat16)
+            if ksc is None:
+                return out, (jnp.pad(kq, pad), jnp.pad(vq, pad))
+            return out, (jnp.pad(kq, pad), jnp.pad(vq, pad),
+                         jnp.pad(ksc, pad[:-1]), jnp.pad(vsc, pad[:-1]))
 
-        x, (ks, vs) = jax.lax.scan(body, x,
-                                   jnp.arange(mx.layers_enc_max))
-        return self._unembed(x, table, mid, d_live, v_live), KVCache(ks, vs)
+        x, st = jax.lax.scan(body, x, jnp.arange(mx.layers_enc_max))
+        return self._unembed(x, table, mid, d_live, v_live), KVCache(*st)
 
     # ------------------------------------------------------------------
     # Fused decode step (the multi-topology payoff)
@@ -389,7 +487,7 @@ class DecodeFabric:
         l_live, d_live = topo[:, REG_LAYERS], topo[:, REG_DMODEL]
         f_live, v_live = topo[:, REG_DFF], topo[:, REG_VOCAB]
         idx = jnp.asarray(index, jnp.int32)
-        emb = table["embed"][mid, tokens[:, 0]].astype(self.compute_dtype)
+        emb = self._embed_rows(table, mid, tokens[:, 0])
         x = (emb * masking.slot_mask(mx.d_model_max, d_live, emb.dtype)
              )[:, None]
         positions = idx[:, None]
@@ -411,33 +509,38 @@ class DecodeFabric:
             lp = self._gather_layer(table, mid, i)
             xn = self._norm(h, lp["ln1"], d_live)
             q, k_new, v_new = self._qkv(xn, lp, positions, he)
+            kq, ksc = self.codec.store(k_new[:, 0], c.k.dtype)
+            vq, vsc = self.codec.store(v_new[:, 0], c.v.dtype)
             if block_tables is not None:
-                k = c.k.at[blk, off].set(k_new[:, 0].astype(c.k.dtype))
-                v = c.v.at[blk, off].set(v_new[:, 0].astype(c.v.dtype))
+                k, k_sc = cache_put(c.k, c.k_scale, (blk, off), kq, ksc)
+                v, v_sc = cache_put(c.v, c.v_scale, (blk, off), vq, vsc)
                 if paged_attn_impl == "pallas":
                     from repro.kernels.paged_attention import \
                         paged_decode_attention
                     lengths = jnp.minimum(idx + 1, t_max)
                     o = paged_decode_attention(
                         q[:, 0], k, v, block_tables, lengths,
-                        live_kv=h_live, interpret=interpret)[:, None]
+                        live_kv=h_live, k_scale=k_sc, v_scale=v_sc,
+                        interpret=interpret)[:, None]
                 else:
-                    kg = k[block_tables].reshape(B, t_max, mx.heads_max,
-                                                 self.hd)
-                    vg = v[block_tables].reshape(B, t_max, mx.heads_max,
-                                                 self.hd)
+                    shp = (B, t_max, mx.heads_max, self.hd)
+                    kg = gather_view(self.codec, k, k_sc, block_tables,
+                                     shp, q.dtype)
+                    vg = gather_view(self.codec, v, v_sc, block_tables,
+                                     shp, q.dtype)
                     o = self._attend(q, kg, vg, live)
             else:
-                k = c.k.at[rows, idx].set(k_new[:, 0].astype(c.k.dtype))
-                v = c.v.at[rows, idx].set(v_new[:, 0].astype(c.v.dtype))
-                o = self._attend(q, k, v, live)
+                k, k_sc = cache_put(c.k, c.k_scale, (rows, idx), kq, ksc)
+                v, v_sc = cache_put(c.v, c.v_scale, (rows, idx), vq, vsc)
+                o = self._attend(q, self.codec.load(k, k_sc, q.dtype),
+                                 self.codec.load(v, v_sc, q.dtype), live)
             a = self._mm((o * he).reshape(B, 1, -1), lp["wo"]) * dm
             h1 = h + a
             f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
                           f_live) * dm
             h2 = h1 + f
             out = jnp.where((i < l_live)[:, None, None], h2, h)
-            return out, KVCache(k, v)
+            return out, KVCache(k, v, k_sc, v_sc)
 
         x, new_cache = jax.lax.scan(
             body, x, (jnp.arange(mx.layers_enc_max), cache))
@@ -470,7 +573,7 @@ class DecodeFabric:
         f_live, v_live = topo[:, REG_DFF], topo[:, REG_VOCAB]
         start = jnp.asarray(start, jnp.int32)
         positions = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
-        emb = table["embed"][mid[:, None], tokens].astype(self.compute_dtype)
+        emb = self._embed_rows(table, mid[:, None], tokens)
         x = emb * masking.slot_mask(mx.d_model_max, d_live,
                                     emb.dtype)[:, None, :]
         he = masking.slot_mask(mx.heads_max, h_live)[:, None, :, None] \
@@ -497,32 +600,37 @@ class DecodeFabric:
             lp = self._gather_layer(table, mid, i)
             xn = self._norm(h, lp["ln1"], d_live)
             q, k_new, v_new = self._qkv(xn, lp, positions, he)
+            kq, ksc = self.codec.store(k_new, c.k.dtype)
+            vq, vsc = self.codec.store(v_new, c.v.dtype)
             if block_tables is not None:
-                k = c.k.at[blk, off].set(k_new.astype(c.k.dtype))
-                v = c.v.at[blk, off].set(v_new.astype(c.v.dtype))
+                k, k_sc = cache_put(c.k, c.k_scale, (blk, off), kq, ksc)
+                v, v_sc = cache_put(c.v, c.v_scale, (blk, off), vq, vsc)
                 if paged_attn_impl == "pallas":
                     from repro.kernels.chunked_prefill import \
                         chunked_prefill_attention
                     o = chunked_prefill_attention(
                         q, k, v, block_tables, start,
-                        live_kv=h_live, interpret=interpret)
+                        live_kv=h_live, k_scale=k_sc, v_scale=v_sc,
+                        interpret=interpret)
                 else:
-                    kg = k[block_tables].reshape(B, t_max, mx.heads_max,
-                                                 self.hd)
-                    vg = v[block_tables].reshape(B, t_max, mx.heads_max,
-                                                 self.hd)
+                    shp = (B, t_max, mx.heads_max, self.hd)
+                    kg = gather_view(self.codec, k, k_sc, block_tables,
+                                     shp, q.dtype)
+                    vg = gather_view(self.codec, v, v_sc, block_tables,
+                                     shp, q.dtype)
                     o = self._attend(q, kg, vg, live)
             else:
-                k = c.k.at[rows, pos].set(k_new.astype(c.k.dtype))
-                v = c.v.at[rows, pos].set(v_new.astype(c.v.dtype))
-                o = self._attend(q, k, v, live)
+                k, k_sc = cache_put(c.k, c.k_scale, (rows, pos), kq, ksc)
+                v, v_sc = cache_put(c.v, c.v_scale, (rows, pos), vq, vsc)
+                o = self._attend(q, self.codec.load(k, k_sc, q.dtype),
+                                 self.codec.load(v, v_sc, q.dtype), live)
             a = self._mm((o * he).reshape(B, W, -1), lp["wo"]) * dm
             h1 = h + a
             f = self._ffn(self._norm(h1, lp["ln2"], d_live), lp,
                           f_live) * dm
             h2 = h1 + f
             out = jnp.where((i < l_live)[:, None, None], h2, h)
-            return out, KVCache(k, v)
+            return out, KVCache(k, v, k_sc, v_sc)
 
         x, new_cache = jax.lax.scan(
             body, x, (jnp.arange(mx.layers_enc_max), cache))

@@ -141,3 +141,57 @@ def test_execution_dtypes_flow_to_model_options():
     assert isinstance(model.opt, ModelOptions)
     assert model.opt.matmul_backend == "pallas"
     assert model.opt.compute_dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# String dtypes, quant_min_size, kv_dtype (the fully-quantized surface)
+# ---------------------------------------------------------------------------
+def test_execution_accepts_string_dtype_names():
+    ex = ExecutionSpec(param_dtype="fp32", compute_dtype="bf16")
+    assert ex.param_dtype == jnp.float32
+    assert ex.compute_dtype == jnp.bfloat16
+    assert ExecutionSpec(compute_dtype="float16").compute_dtype == jnp.float16
+    # normalized strings flow through from_spec like real dtypes
+    from repro.models.model import Model
+    spec = RuntimeSpec(arch=reduced_cfg("qwen1.5-0.5b"),
+                       execution=ExecutionSpec(compute_dtype="fp32"))
+    assert Model.from_spec(spec).opt.compute_dtype == jnp.float32
+
+
+def test_execution_rejects_bad_dtypes():
+    with pytest.raises(ValueError, match="recognized dtype name"):
+        ExecutionSpec(param_dtype="int7")
+    with pytest.raises(ValueError, match="floating"):
+        ExecutionSpec(compute_dtype=jnp.int8)
+
+
+def test_execution_quant_min_size_validated():
+    assert ExecutionSpec().quant_min_size == 65_536
+    assert ExecutionSpec(quant_min_size=0).quant_min_size == 0
+    with pytest.raises(ValueError, match="quant_min_size"):
+        ExecutionSpec(quant_min_size=-1)
+
+
+def test_memory_kv_dtype_validated_and_lowered():
+    from repro.core.kv_quant import CacheCodec
+    mem = MemorySpec(kv_dtype="int8")
+    assert mem.codec() == CacheCodec("int8") and mem.codec().quantized
+    assert not MemorySpec().codec().quantized
+    with pytest.raises(ValueError, match="kv_dtype"):
+        MemorySpec(kv_dtype="fp8")
+
+
+def test_kv_dtype_int8_rejects_recurrent_families():
+    cfg = reduced_cfg("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="kv_dtype='int8' is unsupported"):
+        RuntimeSpec(arch=cfg, memory=MemorySpec(kv_dtype="int8",
+                                                max_len=64))
+
+
+def test_kv_dtype_flows_to_model_options():
+    from repro.models.model import Model
+    spec = RuntimeSpec(arch=reduced_cfg("qwen1.5-0.5b"),
+                       memory=MemorySpec(kv_dtype="int8", max_len=64))
+    model = Model.from_spec(spec)
+    assert model.opt.kv_dtype == "int8"
+    assert model.codec.quantized
