@@ -1,0 +1,34 @@
+"""``repro.analysis`` — the jit-discipline analyzer.
+
+Every perf claim this repo makes rests on invariants nothing in the
+type system enforces: the fused serving step compiles exactly once, the
+KV cache and ``SlotState`` are actually donated, no host sync rides
+inside the decode loop, and the Pallas grids divide the ``MemorySpec``
+block geometry.  This package checks them at review time instead of in
+a benchmark three PRs later:
+
+* ``lint``            — AST walk over ``src/repro`` flagging host-sync
+  calls / traced-Python-``if`` / use-after-donate / mutable dataclass
+  defaults / per-slot device_gets (rules RA001..RA005, suppressible
+  with ``# ra: ignore[RAxxx]``).
+* ``jaxpr_audit``     — traces each supported fused step with
+  ``jax.make_jaxpr`` / ``.lower()`` and asserts no callback primitives,
+  no f64 promotion, donation actually applied, and per-step
+  primitive-count budgets.
+* ``census``          — compiles every point of the supported
+  (family x layout x kv_dtype x backend x scheduler) matrix once and
+  writes ``ANALYSIS.json`` (compile counts + jaxpr fingerprints) that
+  CI diffs against the committed baseline.
+* ``pallas_contracts``— statically checks the three serving Pallas
+  kernels' grid/BlockSpec tile math against the ``MemorySpec`` geometry
+  and the bounds of the scalar-prefetched block-table index maps.
+
+CLI: ``python -m repro.analysis --check`` runs all four passes and
+exits non-zero on any finding.  ``--update-baseline`` regenerates
+``ANALYSIS.json`` after an intentional lowering change.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import Finding, lint_paths, lint_source  # noqa: F401
+from repro.analysis.pallas_contracts import (  # noqa: F401
+    KernelGeometry, check_contracts, check_geometry)

@@ -1,0 +1,129 @@
+"""``python -m repro.analysis`` — run the jit-discipline analyzer.
+
+Modes
+-----
+--check            all four passes (lint, pallas contracts, jaxpr audit,
+                   compile census vs the committed ANALYSIS.json).  This
+                   is what CI runs; exit 1 on any finding.
+--fast             lint + static pallas contracts only (no engine
+                   builds, no tracing) — a pre-commit-speed subset.
+--update-baseline  re-run the census and rewrite ANALYSIS.json (after
+                   an intentional lowering change).
+--lint PATH ...    lint specific files/directories instead of src/repro.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+SRC_ROOT = Path(__file__).resolve().parents[2]
+
+
+def _lint(paths: list[str]) -> int:
+    from repro.analysis.lint import lint_paths
+
+    findings = []
+    for p in paths:
+        findings.extend(lint_paths(p))
+    for f in findings:
+        print(f.render())
+    print(f"lint: {len(findings)} finding(s) over {', '.join(paths)}")
+    return len(findings)
+
+
+def _contracts(trace: bool) -> int:
+    from repro.analysis.census import support_matrix
+    from repro.analysis.pallas_contracts import (KernelGeometry,
+                                                 check_contracts)
+    from repro.configs import REGISTRY, reduced
+    from repro.core.spec import MemorySpec, SchedulerSpec
+
+    geometries = {}
+    for point in support_matrix():
+        cfg = reduced(REGISTRY[point.arch])
+        if not cfg.num_kv_heads:
+            continue
+        mem = MemorySpec(cache_layout=point.cache_layout,
+                         kv_dtype=point.kv_dtype,
+                         max_batch=4, max_len=64, block_size=8)
+        geometries[point.name] = KernelGeometry.from_spec(
+            mem, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            chunk_lanes=SchedulerSpec().chunk_size)
+    bad = check_contracts(geometries, trace=trace)
+    for name, violations in bad.items():
+        for v in violations:
+            print(f"pallas-contract: {name}: {v}")
+    print(f"pallas contracts: {sum(map(len, bad.values()))} violation(s) "
+          f"over {len(geometries)} geometries"
+          f"{' (traced)' if trace else ' (static only)'}")
+    return sum(map(len, bad.values()))
+
+
+def _audit() -> int:
+    from repro.analysis.jaxpr_audit import run_audit
+
+    bad = run_audit(progress=lambda n: print(f"  auditing {n} ..."))
+    for violations in bad.values():
+        for v in violations:
+            print(f"jaxpr-audit: {v}")
+    print(f"jaxpr audit: {sum(map(len, bad.values()))} violation(s)")
+    return sum(map(len, bad.values()))
+
+
+def _census(update: bool, names: list[str] | None) -> int:
+    from repro.analysis import census
+
+    report = census.run_census(
+        names, progress=lambda n: print(f"  census {n} ..."))
+    if update:
+        census.write_baseline(report)
+        print(f"census: baseline written to {census.BASELINE}")
+        return 0
+    baseline = census.load_baseline()
+    if baseline is None:
+        print(f"census: no baseline at {census.BASELINE} — run "
+              "`python -m repro.analysis --update-baseline` and commit it")
+        return 1
+    diffs = census.compare(report, baseline, subset=names is not None)
+    for d in diffs:
+        print(f"census: {d}")
+    print(f"census: {len(diffs)} diff(s) over "
+          f"{len(report['points'])} matrix points")
+    return len(diffs)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jit-discipline analyzer: AST lint, pallas contracts, "
+                    "jaxpr audit, compile census")
+    ap.add_argument("--check", action="store_true",
+                    help="run all four passes (CI mode)")
+    ap.add_argument("--fast", action="store_true",
+                    help="lint + static contracts only (no tracing)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-run the census and rewrite ANALYSIS.json")
+    ap.add_argument("--census-points", nargs="*", default=None,
+                    help="restrict census/audit to these matrix points")
+    ap.add_argument("--lint", nargs="*", default=None, metavar="PATH",
+                    help="lint these paths instead of src/repro")
+    args = ap.parse_args(argv)
+
+    lint_paths = args.lint if args.lint else [str(SRC_ROOT / "repro")]
+
+    if args.update_baseline:
+        return 1 if _census(True, args.census_points) else 0
+
+    failures = 0
+    failures += _lint(lint_paths)
+    failures += _contracts(trace=not args.fast)
+    if not args.fast:
+        failures += _audit()
+        failures += _census(False, args.census_points)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

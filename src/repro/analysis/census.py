@@ -1,0 +1,227 @@
+"""Compile census: one compilation per fused program, for the whole
+support matrix, asserted in CI.
+
+The engine's headline invariant — *steady-state decode compiles exactly
+once, no matter the workload* — currently lives in a handful of tests
+that each pin one configuration.  The census makes it a property of the
+**support matrix**: every supported point of
+
+    (family) x (cache layout) x (kv dtype) x (kernel backend) x (scheduler)
+
+is driven end-to-end on a reduced architecture, and for each point we
+record
+
+* the engine's compile counts (``decode`` must be exactly 1 everywhere;
+  ``prefill`` is 1 under the chunked scheduler and the bucket count
+  under the legacy policy), and
+* a sha256 fingerprint of the fused decode step's jaxpr — the canonical
+  "what program does this point actually run".
+
+``run_census`` produces the report; ``ANALYSIS.json`` at the repo root
+is the committed baseline, and ``compare`` diffs a fresh report against
+it so CI fails when a change grows the compile count or silently swaps
+the lowering of a supported configuration.  Fingerprints are compared
+only when the installed jax version matches the baseline's (lowering
+drifts across jax releases are not regressions of *this* repo); the
+compilations == 1 assertion holds unconditionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Any
+
+BASELINE = Path(__file__).resolve().parents[3] / "ANALYSIS.json"
+
+_ADDR_RE = re.compile(r"0x[0-9a-fA-F]+")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixPoint:
+    """One supported configuration of the serving matrix."""
+
+    name: str
+    arch: str = "qwen1.5-0.5b"       # registry name (reduced() at build)
+    cache_layout: str = "dense"      # MemorySpec.cache_layout
+    kv_dtype: str = "compute"        # MemorySpec.kv_dtype
+    matmul_backend: str = "xla"      # ExecutionSpec.matmul_backend
+    paged_attn_impl: str = "gather"  # ExecutionSpec.paged_attn_impl
+    policy: str = "bucketed"         # SchedulerSpec.policy
+    fleet: bool = False              # multi-topology (maxima) mode
+
+
+def support_matrix() -> tuple[MatrixPoint, ...]:
+    """The curated census points, smallest/cheapest first.
+
+    One point per *distinct lowering* of the fused step — every cache
+    layout, codec, kernel backend, scheduler, and family that routes a
+    different program through ``_decode_impl``.
+    """
+    return (
+        # the two cheapest points double as the test-suite round trip
+        MatrixPoint("gqa-dense-xla-bucketed"),
+        MatrixPoint("gqa-dense-xla-chunked", policy="chunked"),
+        MatrixPoint("gqa-paged-xla-chunked", cache_layout="paged",
+                    policy="chunked"),
+        MatrixPoint("gqa-dense-int8kv-bucketed", kv_dtype="int8"),
+        MatrixPoint("gqa-paged-int8kv-chunked", cache_layout="paged",
+                    kv_dtype="int8", policy="chunked"),
+        MatrixPoint("gqa-paged-pallas-attn-chunked", cache_layout="paged",
+                    paged_attn_impl="pallas", policy="chunked"),
+        MatrixPoint("gqa-dense-pallas-matmul-bucketed",
+                    matmul_backend="pallas"),
+        MatrixPoint("mla-dense-xla-chunked", arch="deepseek-v3-671b",
+                    policy="chunked"),
+        MatrixPoint("mla-paged-int8kv-chunked", arch="deepseek-v3-671b",
+                    cache_layout="paged", kv_dtype="int8",
+                    policy="chunked"),
+        MatrixPoint("moe-paged-xla-chunked", arch="granite-moe-1b-a400m",
+                    cache_layout="paged", policy="chunked"),
+        MatrixPoint("fleet-paged-xla-chunked", cache_layout="paged",
+                    policy="chunked", fleet=True),
+    )
+
+
+def _point_by_name(name: str) -> MatrixPoint:
+    for p in support_matrix():
+        if p.name == name:
+            return p
+    raise KeyError(name)
+
+
+def build_engine(point: MatrixPoint):
+    """Reduced engine + loaded params for one matrix point."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.core.spec import (ExecutionSpec, MemorySpec, RuntimeSpec,
+                                 SchedulerSpec, maxima_for)
+    from repro.models.model import Model
+    from repro.serving.engine import ServingEngine
+    from repro.serving.sampling import SamplingParams
+
+    cfg = reduced(REGISTRY[point.arch])
+    maxima = None
+    cfg_b = None
+    if point.fleet:
+        cfg_b = dc.replace(cfg, name=cfg.name + "-b", num_layers=1,
+                           d_model=48, num_heads=3, num_kv_heads=3,
+                           d_ff=96, vocab_size=96)
+        maxima = maxima_for(cfg, cfg_b, seq_max=64)
+    spec = RuntimeSpec(
+        arch=cfg, maxima=maxima,
+        execution=ExecutionSpec(matmul_backend=point.matmul_backend,
+                                paged_attn_impl=point.paged_attn_impl),
+        memory=MemorySpec(cache_layout=point.cache_layout,
+                          kv_dtype=point.kv_dtype,
+                          max_batch=4, max_len=64, block_size=8),
+        scheduler=SchedulerSpec(policy=point.policy))
+    eng = ServingEngine(spec, sampling=SamplingParams(),
+                        **({"max_models": 2} if maxima is not None else {}))
+    eng.load(Model(cfg).init(jax.random.PRNGKey(0)))
+    if point.fleet:
+        eng.add_model(Model(cfg_b).init(jax.random.PRNGKey(1)), cfg_b)
+    return eng
+
+
+def fingerprint_decode(eng) -> str:
+    """sha256 of the fused decode step's canonicalized jaxpr."""
+    import jax
+
+    jaxpr = jax.make_jaxpr(eng._decode_impl)(
+        eng.params, eng.cache, eng.state, eng.block_tables)
+    text = _ADDR_RE.sub("0x0", str(jaxpr))
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def run_point(point: MatrixPoint) -> dict[str, Any]:
+    """Drive one matrix point end to end; returns its census record."""
+    eng = build_engine(point)
+    prompts = [[1, 2, 3], [4, 5], list(range(1, 9))]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=3)
+    done = eng.run_to_completion()
+    comp = eng.compilations
+    record = {
+        "compilations": {"decode": comp["decode"],
+                         "prefill": comp["prefill"],
+                         "prefill_buckets": comp["prefill_buckets"]},
+        "completed": len(done),
+        "fingerprint": fingerprint_decode(eng),
+    }
+    if comp["decode"] != 1:
+        record["violation"] = (f"decode compiled {comp['decode']}x "
+                               "(the one-compilation invariant)")
+    if point.policy == "chunked" and comp["prefill"] != 1:
+        record["violation"] = (f"chunked prefill compiled "
+                               f"{comp['prefill']}x")
+    if len(done) != len(prompts):
+        record["violation"] = (f"only {len(done)}/{len(prompts)} requests "
+                               "completed")
+    return record
+
+
+def run_census(names: list[str] | None = None,
+               progress=None) -> dict[str, Any]:
+    """Full census report for the given (default: all) matrix points."""
+    import jax
+
+    points = ([_point_by_name(n) for n in names] if names
+              else list(support_matrix()))
+    report: dict[str, Any] = {"jax_version": jax.__version__, "points": {}}
+    for point in points:
+        if progress:
+            progress(point.name)
+        report["points"][point.name] = run_point(point)
+    return report
+
+
+def compare(report: dict[str, Any], baseline: dict[str, Any], *,
+            subset: bool = False) -> list[str]:
+    """Diffs that should fail CI (empty == census matches the baseline).
+
+    Fingerprints participate only on a matching jax version; violations
+    and compile-count drifts always do.  ``subset=True`` skips the
+    missing-point check (the report covered only part of the matrix).
+    """
+    diffs: list[str] = []
+    same_jax = report.get("jax_version") == baseline.get("jax_version")
+    base_pts = baseline.get("points", {})
+    for name, rec in report["points"].items():
+        if "violation" in rec:
+            diffs.append(f"{name}: {rec['violation']}")
+            continue
+        base = base_pts.get(name)
+        if base is None:
+            diffs.append(f"{name}: not in the committed baseline "
+                         "(run --update-baseline)")
+            continue
+        if rec["compilations"] != base["compilations"]:
+            diffs.append(f"{name}: compile counts {rec['compilations']} "
+                         f"!= baseline {base['compilations']}")
+        elif same_jax and rec["fingerprint"] != base["fingerprint"]:
+            diffs.append(f"{name}: decode jaxpr fingerprint "
+                         f"{rec['fingerprint']} != baseline "
+                         f"{base['fingerprint']} (lowering changed; if "
+                         "intentional, run --update-baseline)")
+    if not subset:
+        for name in base_pts:
+            if name not in report["points"]:
+                diffs.append(f"{name}: in the baseline but not produced "
+                             "by this census (matrix point removed?)")
+    return diffs
+
+
+def load_baseline(path: Path = BASELINE) -> dict[str, Any] | None:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def write_baseline(report: dict[str, Any], path: Path = BASELINE) -> None:
+    path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")

@@ -1,0 +1,564 @@
+"""AST lint for jit discipline (rules RA001..RA005).
+
+The walker knows which functions are *jit-region* code — traced by XLA,
+where a host sync or a Python branch on a traced value breaks the
+compile-once contract — and which are host-side control.  A function is
+a jit region when any of:
+
+* it is decorated with ``jax.jit`` / ``functools.partial(jax.jit, ...)``
+  / ``strict_jit``,
+* it is passed to ``jax.jit(...)`` / ``strict_jit(...)`` /
+  ``pl.pallas_call(...)`` anywhere in its module (the serving engine's
+  ``self._decode = strict_jit(self._decode_impl, ...)`` pattern),
+* its ``def`` line (or the line above it / above its first decorator)
+  carries a ``# jit-region`` marker — the registry for functions that
+  are only ever *called from inside* another module's jitted step
+  (``Model.decode_step``, the fabric steps, ``sample_per_slot``).
+
+Nested ``def``s inside a jit region are jit regions too.
+
+Rules
+-----
+RA001  host-sync call inside a jit region: ``jax.device_get``,
+       ``.item()`` / ``.tolist()`` / ``.block_until_ready()``,
+       ``np.asarray`` / ``np.array`` on anything, or ``float()`` /
+       ``int()`` / ``bool()`` applied to a traced value.
+RA002  Python ``if`` / ``while`` on a traced value inside a jit region
+       (``is [not] None`` / ``in`` structure tests are static and
+       exempt — pytree structure is a trace constant).
+RA003  use-after-donate: a call to a jitted function with
+       ``donate_argnums`` whose donated argument expressions are not
+       rebound from the call's result (the donated buffer is dead; any
+       later read is undefined behaviour).
+RA004  mutable or array-valued default in a dataclass field (shared
+       across instances and baked at import; use ``default_factory``).
+RA005  two or more per-slot ``jax.device_get`` calls (scalar-subscripted
+       operands) in one host function — each is a blocking round trip;
+       batch them into one bulk transfer.
+
+Suppression: append ``# ra: ignore[RA001]`` (or a comma list, or bare
+``# ra: ignore`` for all rules) to the flagged line.
+
+Taint model: function parameters (minus ``self``/``cls``) are traced;
+taint flows through expressions and simple assignments, and is *cut* by
+static accessors (``.shape`` / ``.dtype`` / ``.ndim`` / ``.size``,
+``len()`` / ``isinstance()`` / ``hasattr()``) and by ``is`` / ``in``
+comparisons (structure, not values).  It is a one-pass heuristic, not a
+dataflow engine — precise enough that the tree lints clean without
+blessing real violations.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+_SUPPRESS_RE = re.compile(r"#\s*ra:\s*ignore(?:\[([A-Za-z0-9_,\s]+)\])?")
+_MARKER_RE = re.compile(r"#\s*jit-region\b")
+
+# Attribute calls that force a device->host sync.
+_SYNC_ATTRS = frozenset({
+    "device_get", "item", "tolist", "block_until_ready",
+    "copy_to_host_async",
+})
+# Static accessors that cut taint (shape metadata is a trace constant).
+_STATIC_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "sharding",
+                           "aval", "weak_type"})
+_STATIC_CALLS = frozenset({"len", "isinstance", "hasattr", "getattr",
+                           "type", "id", "repr", "str"})
+_CAST_CALLS = frozenset({"float", "int", "bool", "complex"})
+# Dataclass defaults that allocate a shared mutable / array object.
+_MUTABLE_FACTORIES = frozenset({"list", "dict", "set", "bytearray"})
+_ARRAY_FACTORIES = frozenset({"array", "asarray", "zeros", "ones", "full",
+                              "arange", "empty", "zeros_like", "ones_like"})
+
+HINTS = {
+    "RA001": "move the sync out of the jitted step (harvest at the sync "
+             "point) or keep the value on device",
+    "RA002": "branch with jnp.where / lax.cond / lax.select, or hoist the "
+             "decision to the host and pass it as data",
+    "RA003": "rebind the donated operands from the call result "
+             "(`x, y = step(.., x, y)`) or drop them from donate_argnums",
+    "RA004": "use dataclasses.field(default_factory=...) so each instance "
+             "gets its own object",
+    "RA005": "batch the per-slot reads into ONE bulk jax.device_get and "
+             "slice host-side",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return HINTS.get(self.code, "")
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.code} {self.message}"
+                f"\n    fix: {self.hint}")
+
+
+# ---------------------------------------------------------------------------
+# Module scan: jit regions, donation registry, suppressions
+# ---------------------------------------------------------------------------
+def _call_name(node: ast.expr) -> str | None:
+    """Trailing identifier of a Name / dotted Attribute ('jax.jit'->'jit')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_jit_wrapper(func: ast.expr) -> bool:
+    return _call_name(func) in ("jit", "strict_jit")
+
+
+@dataclasses.dataclass
+class _StaticInfo:
+    """Which parameters of a jit-region function are trace-STATIC."""
+    names: set[str] = dataclasses.field(default_factory=set)
+    nums: set[int] = dataclasses.field(default_factory=set)
+    bound: int = 0  # leading params bound by functools.partial (pallas)
+
+
+def _static_kwargs(call: ast.Call, info: _StaticInfo) -> None:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(kw.value,
+                                               (ast.Tuple, ast.List)) \
+                else [kw.value]
+            info.names.update(v.value for v in vals
+                              if isinstance(v, ast.Constant))
+        elif kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(kw.value,
+                                               (ast.Tuple, ast.List)) \
+                else [kw.value]
+            info.nums.update(v.value for v in vals
+                             if isinstance(v, ast.Constant))
+
+
+def _jitted_targets(tree: ast.Module) -> dict[str, _StaticInfo]:
+    """Functions passed to jax.jit / strict_jit / pl.pallas_call, with
+    their static-parameter info (static_argnames/nums, partial-bound
+    leading args of a pallas kernel are Python values at trace time)."""
+    out: dict[str, _StaticInfo] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node.func)
+        bound = 0
+        if name in ("jit", "strict_jit") and node.args:
+            target = node.args[0]
+        elif name == "pallas_call" and node.args:
+            target = node.args[0]
+            # pl.pallas_call(functools.partial(_kernel, s1, s2, ...), ...)
+            if isinstance(target, ast.Call) and \
+                    _call_name(target.func) == "partial" and target.args:
+                bound = len(target.args) - 1
+                target = target.args[0]
+        else:
+            continue
+        tname = _call_name(target)
+        if tname is None:
+            continue
+        info = out.setdefault(tname, _StaticInfo())
+        info.bound = max(info.bound, bound)
+        _static_kwargs(node, info)
+    return out
+
+
+def _jit_decorator_info(node: ast.FunctionDef) -> _StaticInfo | None:
+    """StaticInfo if decorated with [partial(]jax.jit[, static_...]]."""
+    for dec in node.decorator_list:
+        if _is_jit_wrapper(dec):
+            return _StaticInfo()
+        if isinstance(dec, ast.Call):
+            if _is_jit_wrapper(dec.func) or (
+                    _call_name(dec.func) == "partial" and dec.args and
+                    _is_jit_wrapper(dec.args[0])):
+                info = _StaticInfo()
+                _static_kwargs(dec, info)
+                return info
+    return None
+
+
+def _has_marker(node: ast.FunctionDef, lines: list[str]) -> bool:
+    candidates = [node.lineno, node.lineno - 1]
+    if node.decorator_list:
+        candidates.append(node.decorator_list[0].lineno - 1)
+    for ln in candidates:
+        if 1 <= ln <= len(lines) and _MARKER_RE.search(lines[ln - 1]):
+            return True
+    return False
+
+
+def _donation_registry(tree: ast.Module) -> dict[str, tuple[int, ...]]:
+    """name -> donated positions, from `x = [strict_]jit(f, donate_argnums=)`
+    assignments (the name is the *assigned* binding the call sites use)."""
+    reg: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and
+                isinstance(node.value, ast.Call) and
+                _is_jit_wrapper(node.value.func)):
+            continue
+        donated: tuple[int, ...] = ()
+        for kw in node.value.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                donated = tuple(e.value for e in kw.value.elts
+                                if isinstance(e, ast.Constant))
+            elif isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, int):
+                donated = (kw.value.value,)
+        if not donated:
+            continue
+        for tgt in node.targets:
+            tname = _call_name(tgt)
+            if tname is not None:
+                reg[tname] = donated
+    return reg
+
+
+def _suppressed(lines: list[str], lineno: int, code: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    m = _SUPPRESS_RE.search(lines[lineno - 1])
+    if not m:
+        return False
+    if m.group(1) is None:
+        return True
+    return code in {c.strip().upper() for c in m.group(1).split(",")}
+
+
+# ---------------------------------------------------------------------------
+# Taint heuristic
+# ---------------------------------------------------------------------------
+def _expr_tainted(node: ast.expr, tainted: set[str]) -> bool:
+    """Does this expression (transitively) read a traced value?"""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Constant):
+        return False
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Compare):
+        # `x is None` / `"k" in params`: pytree STRUCTURE, trace-static
+        if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+               for op in node.ops):
+            return False
+        # `kind == "r"`: traced values are numeric arrays, so equality
+        # against a string literal is static config dispatch
+        if any(isinstance(c, ast.Constant) and isinstance(c.value, str)
+               for c in [node.left, *node.comparators]):
+            return False
+        return (_expr_tainted(node.left, tainted)
+                or any(_expr_tainted(c, tainted) for c in node.comparators))
+    if isinstance(node, ast.Call):
+        if _call_name(node.func) in _STATIC_CALLS:
+            return False
+        parts = list(node.args) + [kw.value for kw in node.keywords]
+        if isinstance(node.func, ast.Attribute) and \
+                _expr_tainted(node.func.value, tainted):
+            return True
+        return any(_expr_tainted(p, tainted) for p in parts)
+    return any(_expr_tainted(child, tainted)
+               for child in ast.iter_child_nodes(node)
+               if isinstance(child, ast.expr))
+
+
+def _taint_targets(target: ast.expr, value_tainted: bool,
+                   tainted: set[str]) -> None:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            if value_tainted:
+                tainted.add(node.id)
+            else:
+                tainted.discard(node.id)
+
+
+# ---------------------------------------------------------------------------
+# Per-function linters
+# ---------------------------------------------------------------------------
+class _RegionLinter(ast.NodeVisitor):
+    """RA001 + RA002 inside one jit-region function (incl. nested defs)."""
+
+    def __init__(self, fn: ast.FunctionDef, path: str, lines: list[str],
+                 np_aliases: set[str], static: _StaticInfo | None = None,
+                 outer_taint: set[str] | None = None):
+        self.path, self.lines = path, lines
+        self.np_aliases = np_aliases
+        self.findings: list[Finding] = []
+        static = static or _StaticInfo()
+        args = fn.args
+        positional = [a.arg for a in (args.posonlyargs + args.args)]
+        names = positional + [a.arg for a in args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        skip = set(static.names)
+        skip.update(positional[:static.bound])
+        skip.update(positional[i] for i in static.nums
+                    if i < len(positional))
+        self.tainted: set[str] = set(outer_taint or ())
+        self.tainted.update(n for n in names
+                            if n not in ("self", "cls") and n not in skip)
+        for stmt in fn.body:
+            self.visit(stmt)
+
+    def _flag(self, node: ast.AST, code: str, message: str) -> None:
+        if not _suppressed(self.lines, node.lineno, code):
+            self.findings.append(Finding(self.path, node.lineno, code,
+                                         message))
+
+    # -- taint propagation ------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        vt = _expr_tainted(node.value, self.tainted)
+        for tgt in node.targets:
+            _taint_targets(tgt, vt, self.tainted)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if _expr_tainted(node.value, self.tainted):
+            _taint_targets(node.target, True, self.tainted)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None:
+            _taint_targets(node.target,
+                           _expr_tainted(node.value, self.tainted),
+                           self.tainted)
+
+    def visit_For(self, node: ast.For) -> None:
+        it, tgt = node.iter, node.target
+        if (isinstance(it, ast.Call) and _call_name(it.func) == "zip"
+                and isinstance(tgt, ast.Tuple)
+                and len(tgt.elts) == len(it.args)):
+            # zip over mixed static/traced sequences: taint elementwise
+            for elt, seq in zip(tgt.elts, it.args):
+                _taint_targets(elt, _expr_tainted(seq, self.tainted),
+                               self.tainted)
+        else:
+            _taint_targets(tgt, _expr_tainted(it, self.tainted),
+                           self.tainted)
+        self.generic_visit(node)
+
+    # -- RA002: Python control flow on traced values ----------------------
+    def visit_If(self, node: ast.If) -> None:
+        if _expr_tainted(node.test, self.tainted):
+            self._flag(node, "RA002",
+                       f"Python `if` on traced value "
+                       f"`{ast.unparse(node.test)}` inside a jit region "
+                       "(concretization error or silent retrace)")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if _expr_tainted(node.test, self.tainted):
+            self._flag(node, "RA002",
+                       f"Python `while` on traced value "
+                       f"`{ast.unparse(node.test)}` inside a jit region")
+        self.generic_visit(node)
+
+    # -- RA001: host syncs ------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_ATTRS:
+                self._flag(node, "RA001",
+                           f"host sync `{ast.unparse(func)}(...)` inside a "
+                           "jit region")
+            elif func.attr in ("asarray", "array") and \
+                    isinstance(func.value, ast.Name) and \
+                    func.value.id in self.np_aliases:
+                self._flag(node, "RA001",
+                           f"`{ast.unparse(func)}(...)` materializes a host "
+                           "numpy array inside a jit region")
+        elif isinstance(func, ast.Name) and func.id in _CAST_CALLS:
+            if any(_expr_tainted(a, self.tainted) for a in node.args):
+                self._flag(node, "RA001",
+                           f"`{func.id}()` on a traced value forces a host "
+                           "sync inside a jit region")
+        self.generic_visit(node)
+
+    # nested defs trace under the same jit region, with the outer taint
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        sub = _RegionLinter(node, self.path, self.lines, self.np_aliases,
+                            outer_taint=self.tainted)
+        self.findings.extend(sub.findings)
+
+
+def _lint_donation_sites(tree: ast.Module, path: str, lines: list[str],
+                         registry: dict[str, tuple[int, ...]]
+                         ) -> list[Finding]:
+    """RA003: every call of a donated jit must rebind its donated args."""
+    if not registry:
+        return []
+    findings: list[Finding] = []
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node.func)
+        if name not in registry:
+            continue
+        if isinstance(node.func, ast.Name) and name in ("jit", "strict_jit"):
+            continue
+        donated = [ast.unparse(node.args[p]) for p in registry[name]
+                   if p < len(node.args)]
+        if not donated:
+            continue
+        parent = parents.get(node)
+        # unwrap `x, y = call(...)`; anything else (bare expr, nested use)
+        # leaves the donated operands dead with no rebinding
+        targets: set[str] = set()
+        if isinstance(parent, ast.Assign) and parent.value is node:
+            for tgt in parent.targets:
+                elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                    else [tgt]
+                targets.update(ast.unparse(e) for e in elts)
+        dead = [d for d in donated if d not in targets]
+        if dead and not _suppressed(lines, node.lineno, "RA003"):
+            findings.append(Finding(
+                path, node.lineno, "RA003",
+                f"donated argument(s) {', '.join(dead)} of `{name}` are "
+                "not rebound from the result — the buffers are invalid "
+                "after donation"))
+    return findings
+
+
+def _lint_dataclass_defaults(tree: ast.Module, path: str,
+                             lines: list[str]) -> list[Finding]:
+    """RA004: mutable / array defaults shared across dataclass instances."""
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_dc = any(_call_name(d.func if isinstance(d, ast.Call) else d)
+                    == "dataclass" for d in node.decorator_list)
+        if not is_dc:
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign) and
+                    stmt.value is not None):
+                continue
+            default = stmt.value
+            bad = None
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                bad = "mutable literal"
+            elif isinstance(default, ast.Call):
+                cname = _call_name(default.func)
+                if cname in _MUTABLE_FACTORIES:
+                    bad = "mutable constructor"
+                elif cname in _ARRAY_FACTORIES:
+                    bad = "array constructor"
+            if bad and not _suppressed(lines, stmt.lineno, "RA004"):
+                findings.append(Finding(
+                    path, stmt.lineno, "RA004",
+                    f"dataclass field `{ast.unparse(stmt.target)}` has a "
+                    f"{bad} default `{ast.unparse(default)}` — one shared "
+                    "object for every instance (and every pytree leaf)"))
+    return findings
+
+
+def _lint_per_slot_gets(tree: ast.Module, path: str,
+                        lines: list[str]) -> list[Finding]:
+    """RA005: >= 2 scalar-subscripted device_get calls in one function."""
+
+    def scalar_subscripted(expr: ast.expr) -> bool:
+        for sub in ast.walk(expr):
+            if not isinstance(sub, ast.Subscript):
+                continue
+            idx = sub.slice
+            head = idx.elts[0] if isinstance(idx, ast.Tuple) and idx.elts \
+                else idx
+            if isinstance(head, ast.Name) or (
+                    isinstance(head, ast.Constant) and
+                    isinstance(head.value, int)):
+                return True
+        return False
+
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        hits = []
+        for call in ast.walk(node):
+            if isinstance(call, ast.Call) and \
+                    _call_name(call.func) == "device_get" and call.args and \
+                    scalar_subscripted(call.args[0]):
+                hits.append(call)
+        if len(hits) < 2:
+            continue
+        for call in hits:
+            if not _suppressed(lines, call.lineno, "RA005"):
+                findings.append(Finding(
+                    path, call.lineno, "RA005",
+                    f"{len(hits)} per-slot `jax.device_get` round trips in "
+                    f"`{node.name}` — each one blocks the dispatch queue"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one module's source; returns findings sorted by line."""
+    tree = ast.parse(source)
+    lines = source.splitlines()
+    np_aliases = {"np", "numpy", "onp"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    np_aliases.add(alias.asname or "numpy")
+    jitted = _jitted_targets(tree)
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        static = jitted.get(node.name) or _jit_decorator_info(node)
+        if static is None and not _has_marker(node, lines):
+            continue
+        findings.extend(_RegionLinter(node, path, lines, np_aliases,
+                                      static=static).findings)
+    findings.extend(_lint_donation_sites(tree, path, lines,
+                                         _donation_registry(tree)))
+    findings.extend(_lint_dataclass_defaults(tree, path, lines))
+    findings.extend(_lint_per_slot_gets(tree, path, lines))
+    # a nested jit region reached both via its own marker and via its
+    # parent would double-report; dedupe on (line, code, message)
+    seen: set[tuple] = set()
+    out = []
+    for f in sorted(findings, key=lambda f: (f.line, f.code)):
+        key = (f.line, f.code, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def lint_paths(root: str | Path) -> list[Finding]:
+    """Lint every .py file under ``root`` (or the single file)."""
+    root = Path(root)
+    files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    findings: list[Finding] = []
+    for f in files:
+        try:
+            findings.extend(lint_source(f.read_text(), str(f)))
+        except SyntaxError as e:
+            findings.append(Finding(str(f), e.lineno or 0, "RA000",
+                                    f"syntax error: {e.msg}"))
+    return findings

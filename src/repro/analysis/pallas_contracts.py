@@ -1,0 +1,217 @@
+"""Static contracts for the serving Pallas kernels.
+
+The three kernels (``flash_attention``, ``paged_decode_attention``,
+``chunked_prefill_attention``) encode their correctness conditions in
+tile arithmetic: grids must cover the operands exactly, padded head
+groups must land on TPU sublane/lane multiples, and the scalar-
+prefetched block-table index maps must only ever address rows that
+exist in the pool.  None of that is visible to the type system and all
+of it silently miscomputes (or OOMs VMEM) when violated.
+
+This pass re-derives the tile math from a :class:`KernelGeometry`
+(head counts + ``MemorySpec`` pool geometry) and checks it *statically*
+— no kernel execution — then optionally traces each kernel with
+``jax.eval_shape`` so the real BlockSpec/grid consistency checks inside
+``pallas_call`` run against abstract operands.
+
+Checked invariants
+------------------
+* ``num_heads % num_kv_heads == 0`` — the query-group reshape
+  ``[B, kv, n_rep, hd]`` requires exact head grouping.
+* ``R = rup(max(n_rep, 8), 8)`` is sublane-aligned (``% 8``) and
+  ``hdp = rup(hd, 128)`` lane-aligned (``% 128``) — the padded query
+  group tile must sit on TPU register boundaries.
+* the block table is wide enough: ``nblk * block_size >= max_len``
+  (a slot at ``max_len`` tokens must have a physical block for every
+  logical block the grid walks).
+* null-block safety: pool arrays have ``num_blocks + 1`` rows, the
+  allocator hands out ids ``1..num_blocks``, and ``NULL_BLOCK == 0`` —
+  so every value a block table can hold addresses a real pool row.
+* a per-program VMEM footprint estimate (query tile + two KV tiles +
+  scratch triple) stays under the 16 MiB TPU VMEM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.paging import NULL_BLOCK, blocks_for_tokens
+from repro.core.spec import MemorySpec
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # per-core TPU VMEM
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """Everything the serving kernels' tile math depends on."""
+
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    max_batch: int
+    max_len: int
+    block_size: int
+    num_blocks: int          # usable blocks (pool rows = num_blocks + 1)
+    kv_dtype: str = "compute"    # "compute" | "int8"
+    chunk_lanes: int = 1         # W query lanes of the mixed step
+
+    @classmethod
+    def from_spec(cls, mem: MemorySpec, *, num_heads: int,
+                  num_kv_heads: int, head_dim: int,
+                  chunk_lanes: int = 1) -> "KernelGeometry":
+        return cls(num_heads=num_heads, num_kv_heads=num_kv_heads,
+                   head_dim=head_dim, max_batch=mem.max_batch,
+                   max_len=mem.max_len, block_size=mem.block_size,
+                   num_blocks=mem.resolved_num_blocks,
+                   kv_dtype=mem.kv_dtype, chunk_lanes=chunk_lanes)
+
+    # derived tile quantities (must mirror the kernels' own formulas)
+    @property
+    def n_rep(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def R(self) -> int:
+        return _rup(max(self.n_rep, 8), 8)
+
+    @property
+    def hdp(self) -> int:
+        return _rup(self.head_dim, 128)
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return blocks_for_tokens(self.max_len, self.block_size)
+
+    @property
+    def pool_rows(self) -> int:
+        return self.num_blocks + 1
+
+    def vmem_tile_bytes(self, lanes: int = 1) -> int:
+        """Resident VMEM of one paged-attention program (f32 worst case)."""
+        q_tile = lanes * self.R * self.hdp
+        kv_tiles = 2 * self.block_size * self.hdp
+        scales = 2 * self.block_size if self.kv_dtype == "int8" else 0
+        scratch = self.R * self.hdp + 2 * self.R
+        return 4 * (q_tile + kv_tiles + scales + scratch)
+
+
+def check_geometry(geo: KernelGeometry) -> list[str]:
+    """Static tile-math violations (empty list == contract holds)."""
+    v: list[str] = []
+    if geo.num_kv_heads <= 0 or geo.num_heads <= 0:
+        v.append(f"non-positive head counts: h={geo.num_heads} "
+                 f"kv={geo.num_kv_heads}")
+        return v
+    if geo.num_heads % geo.num_kv_heads != 0:
+        v.append(f"num_heads={geo.num_heads} is not a multiple of "
+                 f"num_kv_heads={geo.num_kv_heads}: the [B, kv, n_rep, hd] "
+                 "query-group reshape cannot be formed")
+    if geo.R % 8 != 0 or geo.R < geo.n_rep:
+        v.append(f"query-group rows R={geo.R} not sublane-aligned for "
+                 f"n_rep={geo.n_rep} (need R % 8 == 0 and R >= n_rep)")
+    if geo.hdp % 128 != 0 or geo.hdp < geo.head_dim:
+        v.append(f"padded head dim hdp={geo.hdp} not lane-aligned for "
+                 f"head_dim={geo.head_dim} (need hdp % 128 == 0)")
+    if geo.block_size <= 0:
+        v.append(f"block_size={geo.block_size} must be positive")
+        return v
+    if geo.blocks_per_slot * geo.block_size < geo.max_len:
+        v.append(f"block table width nblk={geo.blocks_per_slot} covers "
+                 f"only {geo.blocks_per_slot * geo.block_size} tokens < "
+                 f"max_len={geo.max_len}: the kv index map would walk "
+                 "past the last logical block")
+    if geo.num_blocks < geo.blocks_per_slot:
+        v.append(f"pool of {geo.num_blocks} usable blocks cannot hold one "
+                 f"max_len sequence ({geo.blocks_per_slot} blocks): a "
+                 "full-length request could never be admitted")
+    if NULL_BLOCK != 0:
+        v.append(f"NULL_BLOCK={NULL_BLOCK} is not row 0: idle-slot writes "
+                 "would land on a live pool block")
+    # allocator ids are 1..num_blocks; every table value must be a row
+    max_table_entry = geo.num_blocks
+    if max_table_entry >= geo.pool_rows:
+        v.append(f"max block-table entry {max_table_entry} addresses past "
+                 f"the pool ({geo.pool_rows} rows)")
+    vmem = geo.vmem_tile_bytes(lanes=1)
+    if vmem > VMEM_BUDGET_BYTES:
+        v.append(f"per-program VMEM estimate {vmem} B exceeds the "
+                 f"{VMEM_BUDGET_BYTES} B budget (R={geo.R} hdp={geo.hdp} "
+                 f"bs={geo.block_size})")
+    return v
+
+
+def trace_kernels(geo: KernelGeometry) -> list[str]:
+    """Trace the three kernels abstractly at this geometry.
+
+    ``jax.eval_shape`` runs the real grid/BlockSpec consistency checks
+    inside ``pallas_call`` without executing anything; a contract the
+    static pass missed surfaces here as the kernel's own error.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.chunked_prefill import chunked_prefill_attention
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    B, h, kv, hd = (geo.max_batch, geo.num_heads, geo.num_kv_heads,
+                    geo.head_dim)
+    bs, nblk, rows = geo.block_size, geo.blocks_per_slot, geo.pool_rows
+    W = max(geo.chunk_lanes, 1)
+    kv_dt = jnp.int8 if geo.kv_dtype == "int8" else jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    pool = sds((rows, bs, kv, hd), kv_dt)
+    tables = sds((B, nblk), jnp.int32)
+    lens = sds((B,), jnp.int32)
+    scales = {}
+    if geo.kv_dtype == "int8":
+        scales = {"k_scale": sds((rows, bs, kv), jnp.float32),
+                  "v_scale": sds((rows, bs, kv), jnp.float32)}
+
+    failures: list[str] = []
+
+    def _trace(name, fn, *args, **kw):
+        try:
+            out = jax.eval_shape(functools.partial(fn, **kw), *args)
+        except Exception as e:  # the kernel's own contract fired
+            failures.append(f"{name}: {type(e).__name__}: {e}")
+            return
+        want = args[0].shape
+        if tuple(out.shape) != tuple(want):
+            failures.append(f"{name}: output shape {tuple(out.shape)} != "
+                            f"query shape {tuple(want)}")
+
+    _trace("paged_decode_attention", paged_decode_attention,
+           sds((B, h, hd), jnp.bfloat16), pool, pool, tables, lens,
+           interpret=True, **scales)
+    _trace("chunked_prefill_attention", chunked_prefill_attention,
+           sds((B, W, h, hd), jnp.bfloat16), pool, pool, tables, lens,
+           interpret=True, **scales)
+    # flash takes KV already repeated to the query head count
+    seq = _rup(geo.max_len, 8)
+    _trace("flash_attention", flash_attention,
+           sds((B * h, seq, hd), jnp.bfloat16),
+           sds((B * h, seq, hd), jnp.bfloat16),
+           sds((B * h, seq, hd), jnp.bfloat16),
+           causal=True, interpret=True)
+    return failures
+
+
+def check_contracts(geometries: dict[str, KernelGeometry],
+                    trace: bool = True) -> dict[str, list[str]]:
+    """Run all contracts for a set of named geometries.
+
+    Returns {name: [violations]} containing only the names that failed.
+    """
+    bad: dict[str, list[str]] = {}
+    for name, geo in geometries.items():
+        v = check_geometry(geo)
+        if not v and trace:
+            v = trace_kernels(geo)
+        if v:
+            bad[name] = v
+    return bad

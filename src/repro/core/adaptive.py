@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masking
+from repro.core.jitutil import strict_jit
 from repro.core.registers import Maxima, TopologyRegisters
 from repro.models.params import ParamBuilder
 
@@ -243,10 +244,15 @@ class AdaptiveEngine:
         return step
 
     def compile(self, donate: bool = False):
-        """'Synthesis': jit once; every later topology is a register write."""
+        """'Synthesis': jit once; every later topology is a register write.
+
+        ``strict_jit`` makes a requested-but-unusable donation raise
+        under ``REPRO_STRICT=1`` instead of silently copying the padded
+        maximal weight buffers every call."""
         if self._jitted is None:
-            self._jitted = jax.jit(self.serve_fn(),
-                                   donate_argnums=() if not donate else (0,))
+            self._jitted = strict_jit(self.serve_fn(),
+                                      donate_argnums=() if not donate
+                                      else (0,))
         return self._jitted
 
     def trace_count(self) -> int:

@@ -1,0 +1,119 @@
+"""``strict_jit``: ``jax.jit`` whose donation failures are loud.
+
+Every fused serving/training step donates its big buffers
+(``donate_argnums``) so XLA aliases them in place instead of copying a
+KV pool per token.  When a refactor silently breaks the aliasing — an
+output stops matching a donated input's shape/dtype, or a donated value
+gets captured as a constant — XLA demotes the failure to a *warning*
+("Some donated buffers were not usable") and the step quietly doubles
+its memory traffic.  Three PRs later a benchmark notices.
+
+``strict_jit`` is a drop-in ``jax.jit`` wrapper that escalates that
+warning to a ``RuntimeError`` when ``REPRO_STRICT=1`` is set in the
+environment (the test suite sets it, see ``tests/conftest.py``), and on
+platforms that actually implement buffer donation (CPU/TPU/GPU all do
+in current JAX; the probe keeps exotic backends from false-failing).
+Outside strict mode the wrapper is a transparent passthrough.
+
+The wrapper forwards every attribute of the underlying jitted callable
+(``lower``, ``_cache_size``, ...), so compile-count accounting and the
+jaxpr audit (``repro.analysis``) see it as a plain jit.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import warnings
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# Substrings of the XLA/JAX donation-diagnostic warnings we escalate.
+_DONATION_WARNING_MARKERS = (
+    "donated buffers were not usable",
+    "buffer donation",
+    "donation is not implemented",
+)
+
+
+def strict_enabled() -> bool:
+    """True when REPRO_STRICT=1 asks for donation failures to raise.
+
+    Read per call (not cached) so a test can flip the env var.
+    """
+    return os.environ.get("REPRO_STRICT", "0") == "1"
+
+
+@functools.lru_cache(maxsize=None)
+def platform_donates() -> bool:
+    """True when this backend aliases donated buffers at all."""
+    f = jax.jit(lambda a: a + 1.0, donate_argnums=(0,))
+    x = jnp.ones((8,), jnp.float32)
+    p = x.unsafe_buffer_pointer()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        # x is deliberately dead after this call — the probe exists to
+        # observe the donation itself
+        return f(x).unsafe_buffer_pointer() == p  # ra: ignore[RA003]
+
+
+def _is_donation_warning(message: Warning | str) -> bool:
+    text = str(message).lower()
+    return any(m in text for m in _DONATION_WARNING_MARKERS)
+
+
+class DonationError(RuntimeError):
+    """A buffer listed in ``donate_argnums`` was not actually donated."""
+
+
+class _StrictJit:
+    """Callable wrapper escalating donation warnings under REPRO_STRICT.
+
+    The check only has teeth on the calls that *compile* (the warning
+    fires at compile time); cached-executable calls re-enter the
+    recording context but produce no warnings, so steady-state overhead
+    is one ``warnings.catch_warnings`` block per dispatch in strict mode
+    and zero outside it.
+    """
+
+    def __init__(self, jitted: Any, label: str):
+        self._jitted = jitted
+        self._label = label
+
+    def __call__(self, *args, **kwargs):
+        if not (strict_enabled() and platform_donates()):
+            return self._jitted(*args, **kwargs)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            out = self._jitted(*args, **kwargs)
+        bad = [w for w in caught if _is_donation_warning(w.message)]
+        for w in caught:
+            if w not in bad:
+                warnings.warn_explicit(w.message, w.category,
+                                       w.filename, w.lineno)
+        if bad:
+            raise DonationError(
+                f"{self._label}: buffer donation was requested but not "
+                "applied — "
+                + "; ".join(str(w.message) for w in bad)
+                + " (REPRO_STRICT=1 escalates this XLA warning: a fused "
+                "step that stops aliasing its donated buffers silently "
+                "copies them every dispatch; make the output shapes/"
+                "dtypes match the donated inputs or drop the argnum "
+                "from donate_argnums)")
+        return out
+
+    def __getattr__(self, name: str):
+        return getattr(self._jitted, name)
+
+
+def strict_jit(fun: Callable, *, donate_argnums=(), **jit_kwargs):
+    """``jax.jit`` with donation failures escalated under REPRO_STRICT=1.
+
+    Drop-in at every ``donate_argnums`` site; the returned object
+    forwards ``lower``/``_cache_size``/... to the underlying jit.
+    """
+    jitted = jax.jit(fun, donate_argnums=donate_argnums, **jit_kwargs)
+    label = getattr(fun, "__qualname__", getattr(fun, "__name__", repr(fun)))
+    return _StrictJit(jitted, label)

@@ -35,6 +35,7 @@ from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.analytical import (V5E, model_flops, roofline,
                                    scan_undercount_correction,
                                    train_multiplier)
+from repro.core.jitutil import strict_jit
 from repro.distributed import sharding as shd
 from repro.launch import inputs as inp
 from repro.launch.mesh import make_production_mesh, mesh_device_count
@@ -241,9 +242,9 @@ def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             with shd.active(mesh, strategy):
                 return raw(state, batch)
 
-        jitted = jax.jit(wrapped, in_shardings=(st_sh, b_sh),
-                         out_shardings=(st_sh, NamedSharding(mesh, P())),
-                         donate_argnums=(0,))
+        jitted = strict_jit(wrapped, in_shardings=(st_sh, b_sh),
+                            out_shardings=(st_sh, NamedSharding(mesh, P())),
+                            donate_argnums=(0,))
         with backend.faithful():
             lowered = jitted.lower(abstract_state(model, opt_cfg), specs)
     elif shape.kind == "prefill":
@@ -283,10 +284,10 @@ def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             with shd.active(mesh, strategy):
                 return model.decode_step(params, cache, tokens, cache_index)
 
-        jitted = jax.jit(decode,
-                         in_shardings=(p_sh, c_sh, tok_sh, idx_sh),
-                         out_shardings=(logits_sh, c_sh),
-                         donate_argnums=(1,))
+        jitted = strict_jit(decode,
+                            in_shardings=(p_sh, c_sh, tok_sh, idx_sh),
+                            out_shardings=(logits_sh, c_sh),
+                            donate_argnums=(1,))
         with backend.faithful():
             lowered = jitted.lower(
                 abstract, cache_abs, specs["tokens"],

@@ -256,7 +256,7 @@ class Model:
             return jax.lax.scan(body, x, stacked)[0]
         n = jax.tree.leaves(stacked)[0].shape[0]
         for i in range(n):
-            x, _ = body(x, jax.tree.map(lambda l: l[i], stacked))
+            x, _ = body(x, jax.tree.map(lambda l, i=i: l[i], stacked))
         return x
 
     def _run_stack_cache(self, body, x, stacked, cache):
@@ -266,8 +266,8 @@ class Model:
         n = jax.tree.leaves(stacked)[0].shape[0]
         outs = []
         for i in range(n):
-            x, c = body(x, (jax.tree.map(lambda l: l[i], stacked),
-                            jax.tree.map(lambda l: l[i], cache)))
+            x, c = body(x, (jax.tree.map(lambda l, i=i: l[i], stacked),
+                            jax.tree.map(lambda l, i=i: l[i], cache)))
             outs.append(c)
         return x, jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
 
@@ -278,7 +278,7 @@ class Model:
         n = jax.tree.leaves(stacked)[0].shape[0]
         outs = []
         for i in range(n):
-            x, c = body(x, jax.tree.map(lambda l: l[i], stacked))
+            x, c = body(x, jax.tree.map(lambda l, i=i: l[i], stacked))
             outs.append(c)
         return x, jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
 
@@ -296,7 +296,7 @@ class Model:
         main_cache = jax.tree.map(lambda l: l[npref:], cache)
         new_pref = []
         for i, lp in enumerate(prefix):
-            ci = jax.tree.map(lambda l: l[i], pref_cache)
+            ci = jax.tree.map(lambda l, i=i: l[i], pref_cache)
             x, c2 = body(x, (lp, ci))
             new_pref.append(c2)
         x, new_main = self._run_stack_cache(body, x, params["layers"],
@@ -602,6 +602,7 @@ class Model:
         return KVCache(kvals, vvals, ksc, vsc)
 
     @_with_backend
+    # jit-region
     def prefill(self, params: dict, batch: dict, max_len: int):
         """Prompt -> (logits [B,S,V], decode cache ready at index S).
 
@@ -686,6 +687,7 @@ class Model:
         return self._unembed(params, x), cache
 
     @_with_backend
+    # jit-region
     def decode_step(self, params: dict, cache, tokens: jax.Array,
                     cache_index: jax.Array,
                     block_tables: jax.Array | None = None):
@@ -789,6 +791,7 @@ class Model:
         return self._unembed(params, x), new_cache
 
     @_with_backend
+    # jit-region
     def mixed_step(self, params: dict, cache, tokens: jax.Array,
                    start: jax.Array, n_live: jax.Array,
                    block_tables: jax.Array | None = None,

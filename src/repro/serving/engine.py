@@ -77,6 +77,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
                                blocks_for_tokens)
+from repro.core.jitutil import strict_jit
 from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
                              RuntimeSpec)
 from repro.kernels.runtime import interpret_default
@@ -346,9 +347,11 @@ class ServingEngine:
                       "prefill_tokens": 0, "max_step_prefill_tokens": 0}
 
         # the cache and SlotState are donated: XLA aliases the KV pool and
-        # the slot buffers in place of copying them on every fused step
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1, 2))
-        self._step = jax.jit(self._mixed_impl, donate_argnums=(1, 2))
+        # the slot buffers in place of copying them on every fused step.
+        # strict_jit raises (REPRO_STRICT=1) if XLA ever demotes that
+        # aliasing to a copy instead of warning into the void.
+        self._decode = strict_jit(self._decode_impl, donate_argnums=(1, 2))
+        self._step = strict_jit(self._mixed_impl, donate_argnums=(1, 2))
         self._prefill = {}        # bucket -> jitted fn (bucketed path)
         self._insert = jax.jit(self._insert_impl, static_argnums=(3,))
         self._insert_paged = jax.jit(self._insert_paged_impl,
@@ -894,13 +897,18 @@ class ServingEngine:
         slot preempted *mid-prefill* has banked nothing and simply
         restarts its chunk sequence from the prompt head."""
         req = self.slot_req[slot]
-        cnt = int(jax.device_get(self.state.count[slot]))
+        # ONE bulk device_get for the whole bank (count + tokens), sliced
+        # host-side: the per-slot count-then-buffer pair used to cost two
+        # blocking syncs per preemption (RA005).  The transfer is bounded
+        # by the host-known budget mirror, never max_len columns.
+        cap = min(self._budget[slot], self.max_len)
+        cnt_d, row = jax.device_get(
+            (self.state.count[slot], self.state.buf[slot, :cap]))
         self.stats["device_gets"] += 1
+        cnt = int(cnt_d)
         if cnt > 0:
-            toks = jax.device_get(self.state.buf[slot, :cnt])
-            self.stats["device_gets"] += 1
             self.stats["harvest_elems"] += cnt
-            req.prefix = req.prefix + [int(t) for t in toks]
+            req.prefix = req.prefix + [int(t) for t in row[:cnt]]
         self.state = self._evict_slot(self.state, jnp.int32(slot))
         if self.paging is not None:
             self._release_slot_blocks(slot)

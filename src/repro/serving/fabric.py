@@ -425,6 +425,7 @@ class DecodeFabric:
     # ------------------------------------------------------------------
     # Prefill (B=1, one request) — same masked math at S > 1
     # ------------------------------------------------------------------
+    # jit-region
     def prefill(self, table: dict, topo: jax.Array, tokens: jax.Array,
                 max_len: int) -> tuple[jax.Array, KVCache]:
         """tokens [1, S] + topo [N_REGS] -> (masked logits [1, S, V_max],
@@ -473,6 +474,7 @@ class DecodeFabric:
     # ------------------------------------------------------------------
     # Fused decode step (the multi-topology payoff)
     # ------------------------------------------------------------------
+    # jit-region
     def decode_step(self, table: dict, cache: KVCache, tokens: jax.Array,
                     index: jax.Array, topo: jax.Array,
                     block_tables: jax.Array | None = None,
@@ -549,6 +551,7 @@ class DecodeFabric:
     # ------------------------------------------------------------------
     # Fused mixed chunk/decode step (chunked prefill on the fabric)
     # ------------------------------------------------------------------
+    # jit-region
     def mixed_step(self, table: dict, cache: KVCache, tokens: jax.Array,
                    start: jax.Array, n_live: jax.Array, topo: jax.Array,
                    block_tables: jax.Array | None = None,

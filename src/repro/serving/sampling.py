@@ -55,6 +55,7 @@ def sample(logits: jax.Array, rng: jax.Array,
     return jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
 
 
+# jit-region
 def sample_per_slot(logits: jax.Array, rng: jax.Array,
                     temperature: jax.Array, top_k: jax.Array,
                     top_p: jax.Array) -> jax.Array:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.jitutil import strict_jit
 from repro.distributed import sharding as shd
 from repro.models.model import Model
 from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
@@ -31,7 +32,7 @@ class TrainState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class TrainStepConfig:
-    optimizer: AdamWConfig = AdamWConfig()
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
     accum_steps: int = 1          # microbatch gradient accumulation
     donate: bool = True
 
@@ -128,7 +129,10 @@ def make_train_step(model: Model, mesh: Mesh,
         with shd.active(mesh, strategy):
             return raw(state, batch)
 
-    jitted = jax.jit(
+    # strict_jit: a donated TrainState that XLA cannot alias (a dtype or
+    # sharding drift between state in and state out) raises under
+    # REPRO_STRICT=1 instead of doubling optimizer-state memory silently
+    jitted = strict_jit(
         wrapped,
         in_shardings=(st_sh, b_sh),
         out_shardings=(st_sh, NamedSharding(mesh, P())),

@@ -83,6 +83,7 @@ def test_abstract_matches_init_shapes():
         real = model.init(jax.random.PRNGKey(0))
         abstract = model.abstract()
         jax.tree.map(
-            lambda r, a: None if (r.shape, r.dtype) == (a.shape, a.dtype)
-            else pytest.fail(f"{c.name}: abstract/init mismatch"),
+            lambda r, a, name=c.name: None
+            if (r.shape, r.dtype) == (a.shape, a.dtype)
+            else pytest.fail(f"{name}: abstract/init mismatch"),
             real, abstract)
