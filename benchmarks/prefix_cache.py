@@ -1,0 +1,245 @@
+"""Prefix-cached paged pool vs no sharing, at equal pool memory.
+
+Production traffic shares structure: system prompts and few-shot
+preambles put the same long prefix in front of most requests.  Without
+sharing, every arrival re-prefills that prefix (latency) and re-stores
+its KV blocks (capacity).  The prefix cache
+(``MemorySpec(prefix_cache=True)``, ``core.paging.PrefixCache``) attacks
+both: a cache-hit request maps the resident prefix blocks into its block
+table (refcount++, zero compute) and chunked prefill charges token
+budget only for the uncached suffix.
+
+The trace is 80% shared-prefix traffic across two prefix families with
+mixed prompt lengths, 20% unique prompts.  Both engines replay it with
+the same seed and pool geometry; the report measures
+
+* **warm TTFT** — steps and wall time to the first token of a
+  shared-prefix arrival once its family's prefix is resident,
+* **peak concurrency** + **steps to drain** — shared blocks are charged
+  once, so the same pool admits more requests at once,
+* **drain tok/s** and **bit-identical greedy streams** vs the
+  sharing-off engine (sharing reuses identical KV, so it must not move
+  a single token).
+
+    PYTHONPATH=src python benchmarks/prefix_cache.py
+    PYTHONPATH=src python benchmarks/prefix_cache.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+try:                                   # package form (benchmarks.run)
+    from benchmarks._util import append_json
+except ModuleNotFoundError:            # direct script invocation
+    from _util import append_json
+
+from repro.configs import REGISTRY, reduced
+from repro.core.spec import MemorySpec, RuntimeSpec, SchedulerSpec
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+def shared_trace(n: int, prefixes: list[list[int]], max_len: int,
+                 seed: int = 0) -> list[tuple[list[int], int]]:
+    """80% of requests extend one of the shared prefixes with a unique
+    suffix (mixed lengths); 20% are fully unique prompts."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        budget = int(rng.randint(2, max(max_len // 16, 3)))
+        if i % 5 != 4:                                   # 80%: shared
+            base = prefixes[i % len(prefixes)]
+            sfx_len = int(rng.randint(1, max(max_len // 8, 2)))
+            sfx_len = min(sfx_len, max_len - len(base) - budget)
+            suffix = [1 + int(t) for t in rng.randint(0, 50, size=sfx_len)]
+            reqs.append((base + suffix, budget))
+        else:                                            # 20%: unique
+            plen = int(rng.randint(3, max(max_len // 4, 4)))
+            reqs.append(([1 + int(t) for t in rng.randint(0, 50, size=plen)],
+                         budget))
+    return reqs
+
+
+def build(cfg, params, *, prefix: bool, max_batch: int, max_len: int,
+          block_size: int, num_blocks: int) -> ServingEngine:
+    spec = RuntimeSpec(
+        arch=cfg,
+        memory=MemorySpec(cache_layout="paged", max_batch=max_batch,
+                          max_len=max_len, block_size=block_size,
+                          num_blocks=num_blocks, prefix_cache=prefix),
+        scheduler=SchedulerSpec(policy="chunked",
+                                chunk_size=max(block_size, 16)))
+    eng = ServingEngine(spec, sampling=SamplingParams())
+    eng.load(params)
+    return eng
+
+
+def warm(eng: ServingEngine, prefixes: list[list[int]]) -> None:
+    """Prefill one request per prefix family and drain — the prefix
+    engine registers the family chains; the baseline just does the
+    same work for fairness."""
+    for p in prefixes:
+        eng.submit(p + [7], max_new_tokens=2)
+    eng.run_to_completion()
+
+
+def measure_ttft(eng: ServingEngine, prompt: list[int]) -> dict:
+    """Steps + wall seconds until a fresh arrival's first token exists
+    on device.  One bulk count read per step (the harvest idiom)."""
+    uid = eng.submit(prompt, max_new_tokens=4)
+    t0 = time.perf_counter()
+    steps = 0
+    while True:
+        done = eng.step()
+        steps += 1
+        if any(r.uid == uid for r in done):
+            break
+        slot = next((i for i, r in enumerate(eng.slot_req)
+                     if r is not None and r.uid == uid), None)
+        if slot is not None and \
+                int(jax.device_get(eng.state.count)[slot]) > 0:
+            break
+        assert steps < 10_000, "TTFT request never produced a token"
+    dt = time.perf_counter() - t0
+    eng.run_to_completion()
+    return {"steps": steps, "seconds": dt}
+
+
+def drive(eng: ServingEngine, reqs) -> dict:
+    for prompt, budget in reqs:
+        eng.submit(prompt, max_new_tokens=budget)
+    peak, steps, done = 0, 0, []
+    t0 = time.perf_counter()
+    while eng.queue or eng._occupied():
+        done += eng.step()
+        peak = max(peak, len(eng._occupied()))
+        steps += 1
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    return {"peak": peak, "steps": steps, "seconds": dt,
+            "tok_s": toks / max(dt, 1e-9),
+            "done": {r.uid: r.generated for r in done}}
+
+
+def run(arch: str, layers: int | None, max_len: int, block_size: int,
+        num_blocks: int, n_requests: int, max_batch: int,
+        require_ttft: float | None, require_peak: float | None,
+        out_json: str | None, trace_seed: int = 5) -> dict:
+    over = {} if layers is None else {"num_layers": layers}
+    cfg = reduced(REGISTRY[arch], **over)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+
+    # two prefix families, each ~5/8 of max_len — long enough that
+    # re-prefilling them dominates both latency and pool pressure
+    plen = 5 * max_len // 8 // block_size * block_size
+    prefixes = [[10 + f] * plen for f in range(2)]
+    reqs = shared_trace(n_requests, prefixes, max_len, trace_seed)
+
+    results, engines = {}, {}
+    for mode, prefix in (("sharing-off", False), ("sharing-on", True)):
+        eng = build(cfg, params, prefix=prefix, max_batch=max_batch,
+                    max_len=max_len, block_size=block_size,
+                    num_blocks=num_blocks)
+        warm(eng, prefixes)
+        ttft = measure_ttft(eng, prefixes[0] + [40, 41])
+        results[mode] = {"ttft": ttft, **drive(eng, reqs)}
+        engines[mode] = eng
+
+    off, on = results["sharing-off"], results["sharing-on"]
+    n_same = sum(off["done"][u] == on["done"][u] for u in off["done"])
+    ttft_gain = off["ttft"]["seconds"] / max(on["ttft"]["seconds"], 1e-9)
+    ttft_step_gain = off["ttft"]["steps"] / max(on["ttft"]["steps"], 1)
+    peak_gain = on["peak"] / max(off["peak"], 1)
+    drain_gain = off["steps"] / max(on["steps"], 1)
+    st = engines["sharing-on"].stats
+
+    print(f"arch={cfg.name}  max_len={max_len}  pool={num_blocks} x "
+          f"{block_size}-token blocks (equal both engines)")
+    print(f"  trace: {len(reqs)} requests, 80% sharing 2 prefixes of "
+          f"{plen} tokens")
+    for mode in ("sharing-off", "sharing-on"):
+        r = results[mode]
+        print(f"  {mode:12s}  warm TTFT {r['ttft']['seconds'] * 1e3:7.1f} ms "
+              f"({r['ttft']['steps']} steps)   peak concurrency "
+              f"{r['peak']:3d}   steps to drain {r['steps']:4d}   "
+              f"{r['tok_s']:,.0f} tok/s")
+    print(f"  prefix cache: {st['prefix_hits']} hits / "
+          f"{st['prefix_hit_tokens']} tokens skipped, {st['cow_forks']} CoW "
+          f"forks, {st['prefix_evictions']} evictions, "
+          f"{engines['sharing-on'].stats['preemptions']} preemptions")
+    print(f"  warm TTFT {ttft_gain:.2f}x ({ttft_step_gain:.2f}x steps); "
+          f"peak concurrency {peak_gain:.2f}x; drain {drain_gain:.2f}x "
+          f"steps; identical streams {n_same}/{len(off['done'])}")
+
+    assert n_same == len(off["done"]), (
+        f"only {n_same}/{len(off['done'])} shared-prefix streams matched "
+        "the sharing-off engine — shared KV must be bit-identical")
+    if require_ttft is not None:
+        assert ttft_gain >= require_ttft, (
+            f"warm TTFT gain {ttft_gain:.2f}x below the required "
+            f"{require_ttft:.2f}x")
+    if require_peak is not None:
+        assert peak_gain >= require_peak, (
+            f"peak concurrency gain {peak_gain:.2f}x below the required "
+            f"{require_peak:.2f}x at equal pool memory")
+
+    payload = {
+        "benchmark": "prefix_cache",
+        "arch": cfg.name,
+        "config": {"max_len": max_len, "block_size": block_size,
+                   "num_blocks": num_blocks, "requests": n_requests,
+                   "prefix_tokens": plen, "max_batch": max_batch},
+        "warm_ttft": {m: results[m]["ttft"] for m in results},
+        "peak_concurrency": {m: results[m]["peak"] for m in results},
+        "steps_to_drain": {m: results[m]["steps"] for m in results},
+        "drain_tok_s": {m: results[m]["tok_s"] for m in results},
+        "ttft_gain": ttft_gain,
+        "peak_gain": peak_gain,
+        "drain_gain": drain_gain,
+        "identical_streams": f"{n_same}/{len(off['done'])}",
+        "prefix_stats": {k: st[k] for k in
+                         ("prefix_hits", "prefix_hit_tokens", "cow_forks",
+                          "prefix_evictions")},
+    }
+    if out_json:
+        append_json(out_json, "prefix_cache", payload)
+        print(f"  appended to {out_json}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="pool size, same for both engines (default "
+                         "2.5 * max_len / block_size)")
+    ap.add_argument("--requests", type=int, default=25)
+    ap.add_argument("--trace-seed", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=24)
+    ap.add_argument("--require-ttft", type=float, default=2.0,
+                    help="fail unless warm TTFT improves this much")
+    ap.add_argument("--require-peak", type=float, default=1.5,
+                    help="fail unless peak concurrency gains this much")
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 1 layer, short trace, small max_len")
+    args = ap.parse_args()
+    if args.smoke:
+        args.layers, args.max_len, args.requests = 1, 128, 15
+        args.block_size, args.max_batch = 8, 24
+    num_blocks = args.num_blocks or 5 * args.max_len // args.block_size // 2
+    run(args.arch, args.layers, args.max_len, args.block_size, num_blocks,
+        args.requests, args.max_batch, args.require_ttft, args.require_peak,
+        args.json, trace_seed=args.trace_seed)
+
+
+if __name__ == "__main__":
+    main()

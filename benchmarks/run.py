@@ -10,6 +10,7 @@
   fleet   — multi-topology serving vs per-model engines (equal memory)
   serving — chunked prefill vs bucketed (TTFT / tok/s; BENCH_serving.json)
   qcache  — int8 vs bf16 KV cache at equal HBM (concurrency / drain)
+  prefix  — prefix-cached pool vs no sharing (warm TTFT / concurrency)
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ import traceback
 
 from benchmarks import (chunked_prefill, fig5_tilesize, fig8_heads,
                         fig11_portability, fig12_roofline, multi_topology,
-                        quantized_cache, table1_throughput, table2_analytical)
+                        prefix_cache, quantized_cache, table1_throughput,
+                        table2_analytical)
 
 
 def _fleet():
@@ -61,6 +63,21 @@ def _qcache():
     yield f"concurrency_gain,1.00,{r['concurrency_gain']:.2f}"
 
 
+def _prefix():
+    r = prefix_cache.run(arch="qwen1.5-0.5b", layers=1, max_len=128,
+                         block_size=8, num_blocks=40, n_requests=15,
+                         max_batch=24, require_ttft=2.0, require_peak=1.5,
+                         out_json="BENCH_serving.json")
+    yield "metric,sharing_off,sharing_on"
+    yield (f"warm_ttft_s,{r['warm_ttft']['sharing-off']['seconds']:.4f},"
+           f"{r['warm_ttft']['sharing-on']['seconds']:.4f}")
+    yield (f"peak_concurrency,{r['peak_concurrency']['sharing-off']},"
+           f"{r['peak_concurrency']['sharing-on']}")
+    yield (f"steps_to_drain,{r['steps_to_drain']['sharing-off']},"
+           f"{r['steps_to_drain']['sharing-on']}")
+    yield f"identical_streams,{r['identical_streams']},="
+
+
 SECTIONS = [
     ("table1", table1_throughput.run),
     ("table2", table2_analytical.run),
@@ -71,6 +88,7 @@ SECTIONS = [
     ("fleet", _fleet),
     ("serving", _serving),
     ("qcache", _qcache),
+    ("prefix", _prefix),
 ]
 
 

@@ -51,6 +51,7 @@ class MatrixPoint:
     paged_attn_impl: str = "gather"  # ExecutionSpec.paged_attn_impl
     policy: str = "bucketed"         # SchedulerSpec.policy
     fleet: bool = False              # multi-topology (maxima) mode
+    prefix_cache: bool = False       # MemorySpec.prefix_cache
 
 
 def support_matrix() -> tuple[MatrixPoint, ...]:
@@ -82,6 +83,15 @@ def support_matrix() -> tuple[MatrixPoint, ...]:
                     cache_layout="paged", policy="chunked"),
         MatrixPoint("fleet-paged-xla-chunked", cache_layout="paged",
                     policy="chunked", fleet=True),
+        # prefix sharing is host-side bookkeeping: these three points
+        # prove decode still compiles exactly once (and lowers to the
+        # same program as their sharing-off twins) with the trie on
+        MatrixPoint("gqa-paged-prefix-chunked", cache_layout="paged",
+                    policy="chunked", prefix_cache=True),
+        MatrixPoint("gqa-paged-prefix-int8kv-chunked", cache_layout="paged",
+                    kv_dtype="int8", policy="chunked", prefix_cache=True),
+        MatrixPoint("fleet-paged-prefix-chunked", cache_layout="paged",
+                    policy="chunked", fleet=True, prefix_cache=True),
     )
 
 
@@ -119,7 +129,8 @@ def build_engine(point: MatrixPoint):
                                 paged_attn_impl=point.paged_attn_impl),
         memory=MemorySpec(cache_layout=point.cache_layout,
                           kv_dtype=point.kv_dtype,
-                          max_batch=4, max_len=64, block_size=8),
+                          max_batch=4, max_len=64, block_size=8,
+                          prefix_cache=point.prefix_cache),
         scheduler=SchedulerSpec(policy=point.policy))
     eng = ServingEngine(spec, sampling=SamplingParams(),
                         **({"max_models": 2} if maxima is not None else {}))
@@ -140,12 +151,25 @@ def fingerprint_decode(eng) -> str:
 
 
 def run_point(point: MatrixPoint) -> dict[str, Any]:
-    """Drive one matrix point end to end; returns its census record."""
+    """Drive one matrix point end to end; returns its census record.
+
+    Prefix-cache points run a shared-prefix workload in two waves (the
+    trie registers a prompt at prefill completion, so the first wave
+    must drain before the second can hit) and additionally assert that
+    sharing actually occurred — a silent all-miss would vacuously pass
+    the compile-count check."""
     eng = build_engine(point)
-    prompts = [[1, 2, 3], [4, 5], list(range(1, 9))]
+    done = []
+    if point.prefix_cache:
+        shared = list(range(1, 17))            # two full 8-token blocks
+        eng.submit(shared + [20], max_new_tokens=3)
+        done += eng.run_to_completion()        # warm + register
+        prompts = [shared + [21], shared + [22, 23], [4, 5]]
+    else:
+        prompts = [[1, 2, 3], [4, 5], list(range(1, 9))]
     for p in prompts:
         eng.submit(p, max_new_tokens=3)
-    done = eng.run_to_completion()
+    done += eng.run_to_completion()
     comp = eng.compilations
     record = {
         "compilations": {"decode": comp["decode"],
@@ -154,15 +178,20 @@ def run_point(point: MatrixPoint) -> dict[str, Any]:
         "completed": len(done),
         "fingerprint": fingerprint_decode(eng),
     }
+    expected = len(prompts) + (1 if point.prefix_cache else 0)
     if comp["decode"] != 1:
         record["violation"] = (f"decode compiled {comp['decode']}x "
                                "(the one-compilation invariant)")
     if point.policy == "chunked" and comp["prefill"] != 1:
         record["violation"] = (f"chunked prefill compiled "
                                f"{comp['prefill']}x")
-    if len(done) != len(prompts):
-        record["violation"] = (f"only {len(done)}/{len(prompts)} requests "
+    if len(done) != expected:
+        record["violation"] = (f"only {len(done)}/{expected} requests "
                                "completed")
+    if point.prefix_cache and eng.stats["prefix_hits"] < 2:
+        record["violation"] = (
+            f"prefix cache hit {eng.stats['prefix_hits']}x on a workload "
+            "with 2 shared-prefix requests — sharing is not engaging")
     return record
 
 

@@ -145,6 +145,22 @@ def cache_put(values: jax.Array, scales: jax.Array | None, idx: tuple,
     return out_v, out_s
 
 
+def fork_block(cache, src: jax.Array, dst: jax.Array):
+    """Copy-on-write fork: copy pool block ``src`` into block ``dst``
+    across every leaf of a paged cache pytree.
+
+    Every paged cache leaf — GQA K/V values, MLA latents, and their int8
+    scale arrays alike — is pool-block-major on axis 1
+    (``[layers, pool_blocks, block_size, ...]``), so one tree.map forks
+    values *and* scales together: a shared block's ``(position, kv-head)``
+    scale rows are duplicated with its int8 rows and the fork stays
+    exactly the codec's stored representation (bit-identical readback).
+    ``src``/``dst`` may be traced scalars; the caller jits this with the
+    cache donated so XLA rewrites the two rows in place.
+    """
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
+
+
 def gather_view(codec: CacheCodec, values: jax.Array,
                 scales: jax.Array | None, block_tables: jax.Array,
                 shape: tuple[int, ...], dtype) -> jax.Array:

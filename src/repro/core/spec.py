@@ -159,6 +159,12 @@ class MemorySpec:
       token, so nearly 2x concurrent requests at equal HBM.  Supported
       for the KV/latent-cache families (``dense``/``vlm``/``moe``,
       GQA and MLA) in every mode: dense, paged, chunked, fleet.
+
+    ``prefix_cache=True`` (paged + chunked only) keeps prefilled prompt
+    blocks in a refcounted radix trie (``core.paging.PrefixCache``) so
+    requests sharing a prompt prefix map the same physical blocks and
+    prefill only their uncached suffix; the int8 codec composes (shared
+    blocks share their scale rows).
     """
 
     cache_layout: str = "dense"      # "dense" | "paged"
@@ -167,12 +173,18 @@ class MemorySpec:
     block_size: int = 16
     num_blocks: int | None = None    # None -> dense worst case
     kv_dtype: str = "compute"        # "compute" | "int8" (cache codec)
+    prefix_cache: bool = False       # share prompt KV blocks cross-request
 
     def __post_init__(self) -> None:
         if self.cache_layout not in _CACHE_LAYOUTS:
             raise ValueError(
                 f"MemorySpec.cache_layout={self.cache_layout!r} is not one "
                 f"of {_CACHE_LAYOUTS}")
+        if self.prefix_cache and self.cache_layout != "paged":
+            raise ValueError(
+                "MemorySpec.prefix_cache=True requires cache_layout='paged' "
+                "(prefix sharing maps physical pool blocks into multiple "
+                "block tables; the dense layout has no blocks to share)")
         if self.kv_dtype not in KV_DTYPES:
             raise ValueError(
                 f"MemorySpec.kv_dtype={self.kv_dtype!r} is not one of "
@@ -323,6 +335,12 @@ class RuntimeSpec:
                 f"(families {KV_QUANTIZABLE_FAMILIES}); recurrent / "
                 "rolling-window / enc-dec decode state keeps the compute "
                 "dtype — use kv_dtype='compute'")
+        if self.memory.prefix_cache and self.scheduler.policy == "bucketed":
+            raise ValueError(
+                "prefix_cache=True requires the chunked scheduler: a "
+                "cache-hit request resumes prefill mid-prompt, which only "
+                "the fused chunked step supports (the bucketed path always "
+                "replays the whole prompt); use policy='auto' or 'chunked'")
         if self.scheduler.policy == "chunked":
             # "auto" silently falls back to bucketed on these; an explicit
             # chunked request fails loudly at construction instead

@@ -58,6 +58,10 @@ def main() -> None:
                     help="paged layout: tokens per KV block")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged layout: pool size (default: dense worst case)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV blocks across requests "
+                         "(requires --cache-layout paged; rejected at spec "
+                         "construction otherwise)")
     args = ap.parse_args()
 
     names = (args.fleet.split(",") if args.fleet else [args.arch])
@@ -81,7 +85,8 @@ def main() -> None:
                           max_batch=args.max_batch, max_len=args.max_len,
                           block_size=args.block_size,
                           num_blocks=args.num_blocks,
-                          kv_dtype=args.kv_dtype))
+                          kv_dtype=args.kv_dtype,
+                          prefix_cache=args.prefix_cache))
     eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
                         sampling=SamplingParams(temperature=args.temperature,
                                                 top_k=40))
@@ -120,6 +125,13 @@ def main() -> None:
         s = eng.memory_stats()
         print(f"paged pool: {s.total_blocks} x {args.block_size}-token "
               f"blocks, {eng.stats['preemptions']} preemptions")
+        if args.prefix_cache:
+            print(f"prefix cache: {eng.stats['prefix_hits']} hits / "
+                  f"{eng.stats['prefix_hit_tokens']} tokens skipped, "
+                  f"{eng.stats['cow_forks']} CoW forks, "
+                  f"{eng.stats['prefix_evictions']} evictions; "
+                  f"{s.shared_blocks} shared + {s.cached_blocks} parked "
+                  "blocks resident")
     for r in done[:3]:
         print(f"  req {r.uid} (model {r.model}): prompt[:6]={r.prompt[:6]} "
               f"-> {r.generated[:10]}...")

@@ -76,8 +76,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
-                               blocks_for_tokens)
+                               PrefixCache, blocks_for_tokens)
 from repro.core.jitutil import strict_jit
+from repro.core.kv_quant import fork_block
 from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
                              RuntimeSpec)
 from repro.kernels.runtime import interpret_default
@@ -315,6 +316,21 @@ class ServingEngine:
         else:
             self.allocator = None
             self.block_tables = None
+
+        # ---- prefix cache (paged + chunked only) -------------------------
+        self.prefix_cache: PrefixCache | None = None
+        if spec.memory.prefix_cache:
+            if self.scheduler != "chunked":
+                raise ValueError(
+                    "prefix_cache=True requires the chunked scheduler, but "
+                    "policy 'auto' resolved to 'bucketed' for this spec "
+                    "(a cache-hit request resumes prefill mid-prompt, which "
+                    "only the fused chunked step supports); fix the chunk "
+                    "geometry so the chunked scheduler is satisfiable")
+            self.prefix_cache = PrefixCache(self.allocator)
+        # one-shot per occupancy: a slot's prompt blocks are registered in
+        # the trie once its prefill completes
+        self._reg_done = [False] * max_batch
         # host mirrors for block budgeting (exact at sync points; between
         # syncs ``_idx_ub`` is a per-step upper bound on the device index)
         self._plen = [0] * max_batch
@@ -344,7 +360,9 @@ class ServingEngine:
         # bounded by the finished streams' lengths, not max_len
         self.stats = {"decode_steps": 0, "device_gets": 0,
                       "harvest_elems": 0, "preemptions": 0,
-                      "prefill_tokens": 0, "max_step_prefill_tokens": 0}
+                      "prefill_tokens": 0, "max_step_prefill_tokens": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "cow_forks": 0, "prefix_evictions": 0}
 
         # the cache and SlotState are donated: XLA aliases the KV pool and
         # the slot buffers in place of copying them on every fused step.
@@ -359,6 +377,10 @@ class ServingEngine:
         self._admit_slot = jax.jit(self._admit_slot_impl)
         self._admit_chunk = jax.jit(self._admit_chunk_impl)
         self._evict_slot = jax.jit(self._evict_slot_impl)
+        # copy-on-write fork: duplicate one pool block (values + scales)
+        # before a cache-hit request writes past the divergence point.
+        # src/dst are traced scalars — one compilation, cache donated.
+        self._cow = strict_jit(self._cow_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def _init_state(self, rng: jax.Array) -> SlotState:
@@ -541,14 +563,19 @@ class ServingEngine:
             pf_pos=state.pf_pos.at[slot].set(plen))  # bucketed: prefilled
 
     def _admit_chunk_impl(self, state: SlotState, slot, toks, plen, budget,
-                          eos, temp, top_k, top_p, topo) -> SlotState:
+                          eos, temp, top_k, top_p, topo,
+                          start) -> SlotState:
         """Seat one request for chunked prefill: write its prompt into the
         device-resident chunk source and reset every per-slot field — the
         prompt is *not* run here; the fused mixed step consumes it chunk
-        by chunk under the token budget."""
+        by chunk under the token budget.  ``start`` (a traced scalar, so
+        no retrace) is the prefix-cache hit length: positions below it
+        are already resident in the slot's mapped blocks, so prefill
+        resumes mid-prompt exactly as it does after a chunk boundary —
+        0 without a hit."""
         return SlotState(
             last=state.last.at[slot, 0].set(0),
-            index=state.index.at[slot].set(0),
+            index=state.index.at[slot].set(start),
             active=state.active.at[slot].set(True),
             done=state.done.at[slot].set(False),
             budget=state.budget.at[slot].set(budget),
@@ -562,7 +589,12 @@ class ServingEngine:
             topo=state.topo.at[slot].set(topo),
             prompt_buf=state.prompt_buf.at[slot].set(toks),
             prompt_len=state.prompt_len.at[slot].set(plen),
-            pf_pos=state.pf_pos.at[slot].set(0))
+            pf_pos=state.pf_pos.at[slot].set(start))
+
+    def _cow_impl(self, cache, src, dst):
+        """Fork pool block ``src`` into ``dst`` across every cache leaf
+        (values and int8 scale rows alike — ``kv_quant.fork_block``)."""
+        return fork_block(cache, src, dst)
 
     def _evict_slot_impl(self, state: SlotState, slot) -> SlotState:
         """Preemption: park a slot as idle (its tokens were banked on the
@@ -774,11 +806,43 @@ class ServingEngine:
             prompt = req.prompt + req.prefix
             plen = len(prompt)
             budget = req.max_new_tokens - len(req.prefix)
+            start = 0
             if self.paging is not None:
-                blocks = self.allocator.alloc(blocks_for_tokens(
-                    plen, self.paging.block_size))
-                if blocks is None:
-                    break   # FCFS: the queue head waits for blocks
+                total = blocks_for_tokens(plen, self.paging.block_size)
+                if self.prefix_cache is not None:
+                    # consult the trie BEFORE allocating: the hit's blocks
+                    # are pinned (incref + unpark) so the eviction the
+                    # allocation below may trigger cannot reclaim them.
+                    # The cached span is capped at plen - 1 — the last
+                    # prompt token always runs through the model, because
+                    # the first sample needs its logits.
+                    hit = self.prefix_cache.lookup(
+                        self._namespace(req.model), prompt, plen - 1)
+                    self.prefix_cache.acquire(hit)
+                    fresh = self._alloc_blocks(total - len(hit.blocks))
+                    if fresh is None:
+                        self.prefix_cache.release(hit)
+                        break   # FCFS: the queue head waits for blocks
+                    blocks = hit.blocks + fresh
+                    start = hit.tokens
+                    if hit.fork_block is not None:
+                        # mid-block divergence: fork the partial source
+                        # into the request's first private block, then
+                        # unpin the source — concurrent writers never
+                        # alias a shared block
+                        self.cache = self._cow(self.cache,
+                                               jnp.int32(hit.fork_block),
+                                               jnp.int32(fresh[0]))
+                        self.prefix_cache.drop_fork_source(hit)
+                        start += hit.fork_tokens
+                        self.stats["cow_forks"] += 1
+                    if start:
+                        self.stats["prefix_hits"] += 1
+                        self.stats["prefix_hit_tokens"] += start
+                else:
+                    blocks = self.allocator.alloc(total)
+                    if blocks is None:
+                        break   # FCFS: the queue head waits for blocks
                 self._slot_blocks[slot] = blocks
                 row = blocks + [NULL_BLOCK] * (self.blocks_per_slot
                                                - len(blocks))
@@ -796,13 +860,16 @@ class ServingEngine:
                 self.state, jnp.int32(slot), toks, jnp.int32(plen),
                 jnp.int32(budget),
                 jnp.int32(-1 if req.eos_id is None else req.eos_id),
-                temp, top_k, top_p, topo_row)
+                temp, top_k, top_p, topo_row, jnp.int32(start))
             req.slot = slot
             self.slot_req[slot] = req
             self._plen[slot] = plen
             self._budget[slot] = budget
-            self._idx_ub[slot] = 0
-            self._pf[slot] = 0
+            # the scheduler's mirrors start at the cached span: the token
+            # budget is charged only for the uncached suffix
+            self._idx_ub[slot] = start
+            self._pf[slot] = start
+            self._reg_done[slot] = False
             self._seq += 1
             self._admit_seq[slot] = self._seq
 
@@ -836,7 +903,28 @@ class ServingEngine:
     def _occupied(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    def _namespace(self, model: int):
+        """Prefix-trie namespace of one request's KV blocks.  Fleet
+        members share the physical pool but never a trie chain — a
+        prompt's KV is a function of the model that prefilled it."""
+        if self.fabric is not None:
+            return self.fabric.cache_namespace(self.fleet[model], model)
+        return 0
+
     # -- paged block budgeting ----------------------------------------
+    def _alloc_blocks(self, n: int) -> list[int] | None:
+        """``allocator.alloc`` with the LRU eviction tier behind it: when
+        the free list cannot cover ``n``, parked (unreferenced but
+        trie-cached) blocks are evicted oldest-first to make room before
+        the caller falls back to preempting live requests."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix_cache is not None:
+            freed = self.prefix_cache.evict(n - self.allocator.num_free)
+            if freed:
+                self.stats["prefix_evictions"] += freed
+                got = self.allocator.alloc(n)
+        return got
+
     def _slot_token_cap(self, slot: int) -> int:
         """Most cache positions this slot can ever need (then it finishes)."""
         return min(self._plen[slot] + self._budget[slot] - 1, self.max_len)
@@ -865,7 +953,7 @@ class ServingEngine:
             missing = blocks_for_tokens(need_tokens, bs) \
                 - len(self._slot_blocks[slot])
             while missing > 0:
-                got = self.allocator.alloc(missing)
+                got = self._alloc_blocks(missing)
                 if got is not None:
                     n_have = len(self._slot_blocks[slot])
                     self._slot_blocks[slot] += got
@@ -883,11 +971,21 @@ class ServingEngine:
                 self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
 
     def _release_slot_blocks(self, slot: int) -> None:
-        """Return a slot's blocks to the pool and null out its table row."""
-        self.allocator.free(self._slot_blocks[slot])
+        """Release a slot's blocks and null out its table row.
+
+        With prefix caching this is a *decref*, not a free: blocks other
+        requests still map just lose one reference, blocks the trie owns
+        are parked in the LRU tier at refcount zero, and only unshared,
+        uncached blocks return to the free list."""
+        if self.prefix_cache is not None:
+            zeros = self.allocator.decref(self._slot_blocks[slot])
+            self.allocator.free(self.prefix_cache.park(zeros))
+        else:
+            self.allocator.free(self._slot_blocks[slot])
         self._slot_blocks[slot] = []
         self._tables[slot] = [NULL_BLOCK] * self.blocks_per_slot
         self._tables_dirty = True
+        self._reg_done[slot] = False
 
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: bank the slot's generated tokens, free its
@@ -947,6 +1045,8 @@ class ServingEngine:
                 elif self._pf[slot] >= self._plen[slot]:
                     self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
                                              self._slot_token_cap(slot))
+            if self.prefix_cache is not None:
+                self._register_prefixes()
             return
         self.cache, self.state = self._decode(self.params, self.cache,
                                               self.state, self.block_tables)
@@ -954,6 +1054,25 @@ class ServingEngine:
         for slot in self._occupied():
             self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
                                      self._slot_token_cap(slot))
+
+    def _register_prefixes(self) -> None:
+        """Register every slot whose prefill just completed: its whole
+        prompt blocks enter the trie (existing chains win — the slot's
+        duplicate block simply stays private and is freed at release).
+        One-shot per occupancy; registration happens right after the
+        completing dispatch, so any later reader's gather is ordered
+        behind the writes by the device queue itself."""
+        bs = self.paging.block_size
+        for slot in self._occupied():
+            if self._reg_done[slot] or self._pf[slot] < self._plen[slot]:
+                continue
+            req = self.slot_req[slot]
+            tokens = req.prompt + req.prefix
+            n_full = len(tokens) // bs
+            if n_full:
+                self.prefix_cache.insert(self._namespace(req.model), tokens,
+                                         self._slot_blocks[slot][:n_full])
+            self._reg_done[slot] = True
 
     def _harvest(self) -> list[Request]:
         """One bulk device_get of the done/count vectors; token buffers are

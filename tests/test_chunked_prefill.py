@@ -349,3 +349,98 @@ def test_chunked_kernel_matches_gather_reference():
     assert bool(jnp.all(out2[0, :, n_rep:] == 0.0))
     np.testing.assert_array_equal(np.asarray(out2[0, :, :n_rep]),
                                   np.asarray(out[0, :, :n_rep]))
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache x chunked prefill (PR 7)
+# ---------------------------------------------------------------------------
+def _pfx_engine(params, maxima=None, *, prefix=True, max_batch=4,
+                max_len=64, num_blocks=None):
+    spec = RuntimeSpec(
+        arch=CFG, maxima=maxima,
+        memory=MemorySpec(cache_layout="paged", max_batch=max_batch,
+                          max_len=max_len, block_size=8,
+                          num_blocks=num_blocks, prefix_cache=prefix),
+        scheduler=SchedulerSpec(policy="chunked", chunk_size=8))
+    eng = ServingEngine(spec, sampling=SamplingParams(),
+                        **({"max_models": 2} if maxima is not None else {}))
+    eng.load(params)
+    return eng
+
+
+def test_prefix_hit_charges_budget_only_for_uncached_suffix(params):
+    """A 33-token prompt whose first 32 tokens are cached must prefill
+    in ONE chunk step (1 remaining token), where a cold engine needs
+    ceil(33/8) grants — and the resumed slot starts at the cached span."""
+    shared = list(range(1, 33))                  # 4 full blocks
+    eng = _pfx_engine(params)
+    eng.submit(shared + [40], max_new_tokens=2)
+    eng.run_to_completion()                      # warm + register
+    uid = eng.submit(shared + [41], max_new_tokens=4)
+    eng.step()
+    slot = next(s for s, r in enumerate(eng.slot_req)
+                if r is not None and r.uid == uid)
+    assert eng._pf[slot] == 33                   # 32 cached + 1 granted
+    assert eng.stats["prefix_hit_tokens"] >= 32
+    done = eng.run_to_completion()
+    assert [r.uid for r in done] == [uid]
+
+
+def test_prefix_forced_preemption_while_holding_shared_blocks(params):
+    """Force-preempt a request mid-prefill while its block table maps
+    the registered chain: release must decref (not double-free), the
+    chain must survive for the re-admission to re-hit, and the stream
+    must match a never-preempted engine."""
+    shared = list(range(1, 17))                  # 2 full blocks
+    prompt = shared + list(range(40, 64))        # + 24 uncached tokens
+
+    clean = _pfx_engine(params)
+    clean.submit(shared + [9], max_new_tokens=2)
+    clean.run_to_completion()
+    uid = clean.submit(prompt, max_new_tokens=4)
+    want = {r.uid: r.generated for r in clean.run_to_completion()}[uid]
+
+    eng = _pfx_engine(params)
+    eng.submit(shared + [9], max_new_tokens=2)
+    eng.run_to_completion()
+    uid2 = eng.submit(prompt, max_new_tokens=4)
+    eng.step()                                   # resumes at pf=16, +8
+    slot = next(s for s, r in enumerate(eng.slot_req)
+                if r is not None and r.uid == uid2)
+    assert 16 < eng._pf[slot] < len(prompt)      # genuinely mid-prefill
+    assert eng.allocator.ref(eng._slot_blocks[slot][0]) == 1  # chain held
+    hits_before = eng.stats["prefix_hits"]
+    eng._preempt(slot)                           # decref path, no free
+    assert eng.stats["preemptions"] == 1
+    done = {r.uid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["prefix_hits"] == hits_before + 1   # re-hit on re-admit
+    assert done[uid2] == want
+
+
+def test_prefix_fleet_namespaces_isolate_models(params, params_b):
+    """Identical token ids under different models must NOT share blocks:
+    the trie is namespaced per (fleet, model, arch).  Same-model repeats
+    still hit."""
+    maxima = maxima_for(CFG, CFG_B, seq_max=64)
+    eng = _pfx_engine(params, maxima=maxima)
+    mb = eng.add_model(params_b, CFG_B)
+    shared = list(range(1, 17))
+    eng.submit(shared + [7], max_new_tokens=2, model=0)
+    eng.run_to_completion()                      # registers under model 0
+    eng.submit(shared + [8], max_new_tokens=2, model=mb)
+    eng.run_to_completion()
+    assert eng.stats["prefix_hits"] == 0         # cross-model: no sharing
+    eng.submit(shared + [8], max_new_tokens=2, model=0)
+    eng.submit(shared + [9], max_new_tokens=2, model=mb)
+    done = eng.run_to_completion()
+    assert len(done) == 2
+    assert eng.stats["prefix_hits"] == 2         # each namespace hits itself
+    # streams must equal a fleet engine with sharing off
+    ref = _pfx_engine(params, maxima=maxima, prefix=False)
+    ref.add_model(params_b, CFG_B)
+    for m in (0, mb):
+        ua = eng.submit(shared + [5, 6], max_new_tokens=3, model=m)
+        ub = ref.submit(shared + [5, 6], max_new_tokens=3, model=m)
+        ga = {r.uid: r.generated for r in eng.run_to_completion()}[ua]
+        gb = {r.uid: r.generated for r in ref.run_to_completion()}[ub]
+        assert ga == gb

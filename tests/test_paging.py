@@ -315,3 +315,201 @@ def test_mla_paged_matches_dense():
         done = eng.run_to_completion()
         streams[layout] = next(r for r in done if r.uid == uid).generated
     assert streams["dense"] == streams["paged"]
+
+
+# ---------------------------------------------------------------------------
+# Refcounted blocks + the prefix trie (PR 7)
+# ---------------------------------------------------------------------------
+def test_allocator_refcounts():
+    from repro.core.paging import PagingConfig
+    a = BlockAllocator(PagingConfig(block_size=8, num_blocks=8))
+    got = a.alloc(2)
+    assert [a.ref(b) for b in got] == [1, 1]
+    a.incref(got)                       # a second request maps the blocks
+    assert a.decref(got) == []          # first release: nothing hits zero
+    assert a.num_free == 6              # ...so nothing was freed
+    zeros = a.decref(got)
+    assert zeros == got                 # second release: both at zero
+    a.free(zeros)
+    assert a.num_free == 8
+    with pytest.raises(ValueError, match="unreferenced"):
+        a.decref(got)                   # blocks are free again
+    b = a.alloc(1)
+    a.incref(b)
+    with pytest.raises(ValueError, match="still mapped"):
+        a.free(b)                       # refcount 2: free is an error
+    with pytest.raises(ValueError, match="incref of free"):
+        a.incref([a._free[0]])
+
+
+def test_allocator_free_set_stays_consistent():
+    """The persistent free-set must mirror the free list through any
+    interleaving of alloc/free (the O(1) double-free check)."""
+    from repro.core.paging import PagingConfig
+    a = BlockAllocator(PagingConfig(block_size=8, num_blocks=16))
+    x, y = a.alloc(5), a.alloc(3)
+    a.free(x[:2])
+    z = a.alloc(4)
+    a.free(x[2:] + y + z)
+    assert a._free_set == set(a._free)
+    assert a.num_free == 16
+    with pytest.raises(ValueError, match="double free"):
+        a.free([a._free[0]])
+
+
+def test_prefix_trie_roundtrip_and_partial_match():
+    from repro.core.paging import PagingConfig, PrefixCache
+    a = BlockAllocator(PagingConfig(block_size=4, num_blocks=16))
+    pc = PrefixCache(a)
+    toks = list(range(10, 22))                 # 12 tokens = 3 full blocks
+    blocks = a.alloc(3)
+    assert pc.insert(0, toks, blocks) == 3
+    # full-prefix hit, capped below the last token
+    hit = pc.lookup(0, toks + [99], limit=12)
+    assert hit.blocks == blocks and hit.tokens == 12
+    # divergence inside block 2 -> partial (CoW fork) match
+    div = toks[:6] + [77, 78, 79, 80]
+    hit = pc.lookup(0, div, limit=len(div) - 1)
+    assert hit.blocks == blocks[:1] and hit.tokens == 4
+    assert hit.fork_block == blocks[1] and hit.fork_tokens == 2
+    # a different namespace shares nothing
+    assert pc.lookup(1, toks, limit=12).cached_tokens == 0
+
+
+def test_prefix_trie_park_evict_lru():
+    from repro.core.paging import PagingConfig, PrefixCache
+    a = BlockAllocator(PagingConfig(block_size=4, num_blocks=16))
+    pc = PrefixCache(a)
+    b1 = a.alloc(2)
+    pc.insert(0, [1, 2, 3, 4, 5, 6, 7, 8], b1)
+    b2 = a.alloc(1)
+    pc.insert(0, [9, 9, 9, 9], b2)
+    # release both chains: trie-owned blocks park instead of freeing
+    assert pc.park(a.decref(b1 + b2)) == []
+    assert a.num_free == 13 and pc.num_parked == 3
+    assert a.stats().cached_blocks == 3
+    # oldest chain evicts first, leaf before parent, never a live block
+    hit = pc.lookup(0, [9, 9, 9, 9, 0], limit=4)
+    pc.acquire(hit)                            # pin the younger chain
+    freed = pc.evict(3)
+    assert freed == 2 and a.num_free == 15     # b1's two blocks only
+    assert pc.lookup(0, [1, 2, 3, 4], limit=4).cached_tokens == 0
+    assert pc.lookup(0, [9, 9, 9, 9, 0], limit=4).tokens == 4
+    pc.release(hit)
+
+
+def test_prefix_trie_insert_existing_node_wins():
+    """Registering a duplicate chain must keep the original block; the
+    caller's copy stays private (freed at its own release)."""
+    from repro.core.paging import PagingConfig, PrefixCache
+    a = BlockAllocator(PagingConfig(block_size=4, num_blocks=8))
+    pc = PrefixCache(a)
+    b1 = a.alloc(1)
+    assert pc.insert(0, [5, 6, 7, 8], b1) == 1
+    b2 = a.alloc(1)
+    assert pc.insert(0, [5, 6, 7, 8], b2) == 0
+    assert pc.lookup(0, [5, 6, 7, 8, 0], limit=4).blocks == b1
+    assert not pc.owns(b2[0])
+
+
+def _prefix_engine(params, *, prefix=True, max_batch=4, max_len=64,
+                   block_size=8, num_blocks=None, kv_dtype="compute"):
+    from repro.core.spec import MemorySpec, RuntimeSpec, SchedulerSpec
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    spec = RuntimeSpec(
+        arch=cfg,
+        memory=MemorySpec(cache_layout="paged", max_batch=max_batch,
+                          max_len=max_len, block_size=block_size,
+                          num_blocks=num_blocks, kv_dtype=kv_dtype,
+                          prefix_cache=prefix),
+        scheduler=SchedulerSpec(policy="chunked", chunk_size=block_size))
+    eng = ServingEngine(spec, sampling=SamplingParams())
+    eng.load(params)
+    return eng
+
+
+@pytest.mark.parametrize("kv_dtype", ["compute", "int8"])
+def test_prefix_sharing_bit_identical_streams(qwen, kv_dtype):
+    """Cache-hit requests (full-block hits and a CoW fork) must stream
+    exactly what the sharing-off engine streams, in both cache codecs,
+    on one decode compilation."""
+    _, params = qwen
+    shared = list(range(1, 25))                # 3 full 8-token blocks
+    waves = [[(shared + [30], 4)],
+             [(shared + [40, 41], 4),          # full-block hit
+              (shared[:20] + [99, 98], 4),     # CoW fork mid-block 3
+              ([70, 71], 4)]]                  # unrelated miss
+    streams = {}
+    for prefix in (False, True):
+        eng = _prefix_engine(params, prefix=prefix, kv_dtype=kv_dtype)
+        outs = []
+        for wave in waves:
+            uids = [eng.submit(p, max_new_tokens=b) for p, b in wave]
+            done = {r.uid: r.generated for r in eng.run_to_completion()}
+            outs += [done[u] for u in uids]       # submission order
+        streams[prefix] = outs
+        assert eng.compilations["decode"] == 1
+        if prefix:
+            assert eng.stats["prefix_hits"] == 2
+            assert eng.stats["cow_forks"] == 1
+            s = eng.memory_stats()
+            assert s.cached_blocks == 3        # parked after the drain
+    assert streams[True] == streams[False]
+
+
+def test_prefix_sharing_shared_block_accounting(qwen):
+    """Concurrent holders of one prefix: the pool charges the shared
+    blocks once and FragmentationStats reports them as shared."""
+    _, params = qwen
+    eng = _prefix_engine(params, max_batch=4, max_len=64, block_size=8)
+    shared = list(range(1, 17))                # 2 full blocks
+    eng.submit(shared + [5], max_new_tokens=2)
+    eng.run_to_completion()                    # register the chain
+    eng.submit(shared + [6], max_new_tokens=30)
+    eng.submit(shared + [7], max_new_tokens=30)
+    eng.step()
+    s = eng.memory_stats()
+    assert s.shared_blocks == 2                # both map the 2-block chain
+    assert eng.allocator.ref(eng._slot_blocks[0][0]) == 2
+    # physical residency: 2 shared + one private tail block each
+    assert s.used_blocks < sum(len(b) for b in eng._slot_blocks)
+    eng.run_to_completion()
+    assert eng.memory_stats().shared_blocks == 0
+
+
+def test_prefix_mid_prefill_preemption_rehits_trie(qwen):
+    """Satellite: preempting a request mid-prefill while it HOLDS shared
+    blocks must decref (never double-free), and its re-admission must
+    re-hit the trie and stream bit-identically."""
+    _, params = qwen
+    shared = list(range(1, 17))                # 2 full 8-token blocks
+    # A fills block 3 exactly, so its FIRST decode token needs a fourth
+    # block; B's 44-token uncached suffix keeps it prefilling for many
+    # steps.  The pool (9 blocks) is dry by then, nothing is parked
+    # (both chain blocks are mapped), so A's growth preempts B —
+    # youngest — mid-prefill while B holds the shared chain.
+    reqs = [(shared + list(range(40, 48)), 8),
+            (shared + list(range(50, 94)), 4)]
+    streams = {}
+    for prefix in (False, True):
+        eng = _prefix_engine(params, prefix=prefix, max_batch=2,
+                             max_len=64, block_size=8, num_blocks=9)
+        if prefix:
+            eng.submit(shared + [9], max_new_tokens=2)
+            eng.run_to_completion()            # warm: register the chain
+        uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+        done = {r.uid: r.generated for r in eng.run_to_completion()}
+        streams[prefix] = [done[u] for u in uids]
+        if prefix:
+            assert eng.stats["preemptions"] >= 1
+            # A, B, and B's re-admission all hit the registered chain
+            assert eng.stats["prefix_hits"] >= 3
+            assert eng.memory_stats().used_blocks == eng.memory_stats() \
+                .cached_blocks   # drained: only parked blocks resident
+    assert streams[True] == streams[False]
+
+
+def test_prefix_cache_requires_paged_layout():
+    from repro.core.spec import MemorySpec
+    with pytest.raises(ValueError, match="requires cache_layout='paged'"):
+        MemorySpec(cache_layout="dense", prefix_cache=True)

@@ -195,3 +195,21 @@ def test_kv_dtype_flows_to_model_options():
     model = Model.from_spec(spec)
     assert model.opt.kv_dtype == "int8"
     assert model.codec.quantized
+
+
+def test_prefix_cache_validated_at_construction():
+    """prefix_cache composes only with paged + chunked; both illegal
+    combinations fail at spec construction, not at first request."""
+    from repro.core.spec import SchedulerSpec
+    with pytest.raises(ValueError, match="requires cache_layout='paged'"):
+        MemorySpec(cache_layout="dense", prefix_cache=True)
+    cfg = reduced_cfg("qwen1.5-0.5b")
+    mem = MemorySpec(cache_layout="paged", max_len=64, block_size=8,
+                     prefix_cache=True)
+    with pytest.raises(ValueError, match="requires the chunked scheduler"):
+        RuntimeSpec(arch=cfg, memory=mem,
+                    scheduler=SchedulerSpec(policy="bucketed"))
+    # paged + chunked (and the "auto" resolution of it) construct fine
+    RuntimeSpec(arch=cfg, memory=mem,
+                scheduler=SchedulerSpec(policy="chunked", chunk_size=8))
+    RuntimeSpec(arch=cfg, memory=mem, scheduler=SchedulerSpec(policy="auto"))
