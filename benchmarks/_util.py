@@ -1,21 +1,77 @@
-"""Shared helpers for the benchmark scripts."""
+"""Shared helpers for the benchmark scripts.
+
+``BENCH_serving.json`` is a committed artifact: benchmark name ->
+payload.  Payloads are versioned — every writer goes through
+:func:`write_payload`, which stamps ``schema`` and validates both the
+new payload and the existing file before merging, so a malformed or
+legacy entry fails loudly instead of being silently overwritten (or
+silently kept) next to well-formed ones.
+"""
 from __future__ import annotations
 
 import json
 import os
 
+SCHEMA = 1
 
-def append_json(path: str, key: str, payload: dict) -> None:
-    """Merge one benchmark's payload into the shared results file
-    (``BENCH_serving.json`` maps benchmark name -> payload, so each
-    script appends its section instead of overwriting the others)."""
+# every payload must carry these; "results" holds the measured numbers,
+# "config" the knobs that produced them
+_REQUIRED = ("schema", "benchmark", "arch", "config", "results")
+
+
+def validate_payload(key: str, payload: dict) -> None:
+    """Raise ``ValueError`` unless ``payload`` is a well-formed schema-1
+    benchmark entry for ``key``."""
+    if not isinstance(payload, dict):
+        raise ValueError(f"payload for {key!r} is {type(payload).__name__}, "
+                         "not a dict")
+    missing = [k for k in _REQUIRED if k not in payload]
+    if missing:
+        raise ValueError(f"payload for {key!r} is missing required keys "
+                         f"{missing} (have {sorted(payload)})")
+    if payload["schema"] != SCHEMA:
+        raise ValueError(f"payload for {key!r} has schema="
+                         f"{payload['schema']!r}; this writer speaks "
+                         f"schema={SCHEMA}")
+    if payload["benchmark"] != key:
+        raise ValueError(f"payload under key {key!r} names benchmark="
+                         f"{payload['benchmark']!r}; key and benchmark "
+                         "must agree")
+    for k in ("config", "results"):
+        if not isinstance(payload[k], dict):
+            raise ValueError(f"payload[{k!r}] for {key!r} must be a dict, "
+                             f"got {type(payload[k]).__name__}")
+
+
+def write_payload(path: str, key: str, *, arch: str, config: dict,
+                  results: dict, extra: dict | None = None) -> dict:
+    """Build, validate, and merge one benchmark's schema-1 payload into
+    the shared results file.  Returns the payload written."""
+    payload = {"schema": SCHEMA, "benchmark": key, "arch": arch,
+               "config": config, "results": results}
+    if extra:
+        clash = set(extra) & set(payload)
+        if clash:
+            raise ValueError(f"extra keys {sorted(clash)} collide with the "
+                             "schema's required keys")
+        payload.update(extra)
+    validate_payload(key, payload)
     data = {}
     if os.path.exists(path):
         with open(path) as f:
             try:
                 data = json.load(f)
-            except ValueError:
-                data = {}
+            except ValueError as e:
+                raise ValueError(
+                    f"{path} exists but is not valid JSON ({e}); refusing "
+                    "to overwrite — delete it to start fresh") from e
+        if not isinstance(data, dict):
+            raise ValueError(f"{path} holds a {type(data).__name__}, not "
+                             "the benchmark-name -> payload map")
+        for k, v in data.items():
+            if k != key:
+                validate_payload(k, v)   # a malformed neighbour fails loudly
     data[key] = payload
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
+    return payload

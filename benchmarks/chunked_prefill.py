@@ -29,18 +29,18 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
 
 try:                                   # package form (benchmarks.run)
-    from benchmarks._util import append_json
+    from benchmarks._util import write_payload
 except ModuleNotFoundError:            # direct script invocation
-    from _util import append_json
+    from _util import write_payload
 
 from repro.configs import REGISTRY, reduced
 from repro.core.spec import MemorySpec, RuntimeSpec, SchedulerSpec
+from repro.harness import replay, scripted_trace
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams
@@ -61,49 +61,57 @@ def build(cfg, params, policy, max_batch, max_len, chunk, budget):
     return eng
 
 
+def _wall_ttft(events, uid: int) -> float:
+    """Completion-honest wall TTFT: first ``progress`` with a token minus
+    ``submit`` (the harness's TTFT-seconds definition)."""
+    sub = next(e for e in events if e.uid == uid and e.kind == "submit")
+    first = next(e for e in events if e.uid == uid and e.kind == "progress"
+                 and e.data["count"] >= 1)
+    return first.t - sub.t
+
+
 def arrival_phase(eng: ServingEngine, max_len: int, max_new: int,
                   seed: int) -> dict:
     """Seed two background decoders, then land a long + short arrival and
-    time their first tokens plus the background streams' worst stall."""
+    time their first tokens plus the background streams' worst stall.
+    The scenario is a scripted harness trace (background at step 0,
+    arrivals at step 3); every measurement reads the engine's lifecycle
+    events instead of hand-polling device counts."""
     rng = np.random.RandomState(seed)
-    bg = {eng.submit(_prompt(rng, 6), max_new_tokens=4 * max_new)
-          for _ in range(2)}
-    for _ in range(3):                       # background reaches steady decode
-        eng.step()
-    counts = jax.device_get(eng.state.count)
-    prev = {req.uid: int(counts[slot])
-            for slot, req in enumerate(eng.slot_req) if req is not None}
-
-    t0 = time.perf_counter()
-    u_long = eng.submit(_prompt(rng, 3 * max_len // 4),
-                        max_new_tokens=max_new)
-    u_short = eng.submit(_prompt(rng, max(max_len // 16, 4)),
-                         max_new_tokens=max_new)
-    ttft: dict[int, float] = {}
-    last_emit = {u: t0 for u in bg}
-    gaps: list[float] = []
-    steps = 0
-    while len(ttft) < 2 and steps < 10_000:
-        eng.step()
-        steps += 1
-        now = time.perf_counter()
-        counts = jax.device_get(eng.state.count)
-        for slot, req in enumerate(eng.slot_req):
-            if req is None:
+    rows = [(0, _prompt(rng, 6), 4 * max_new),
+            (0, _prompt(rng, 6), 4 * max_new),
+            (3, _prompt(rng, 3 * max_len // 4), max_new),
+            (3, _prompt(rng, max(max_len // 16, 4)), max_new)]
+    res = replay(eng, scripted_trace(rows, name="arrival"))
+    uid_of = {rid: uid for uid, rid in res.uid_to_rid.items()}
+    u_long, u_short = uid_of[2], uid_of[3]
+    ttft = {u: _wall_ttft(res.events, u) for u in (u_long, u_short)}
+    firsts = [next(e for e in res.events if e.uid == u
+                   and e.kind == "progress" and e.data["count"] >= 1)
+              for u in (u_long, u_short)]
+    t_first = max(e.t for e in firsts)
+    arrival = next(e for e in res.events if e.uid == u_long
+                   and e.kind == "submit")
+    t_arrival = arrival.t
+    # background stall: widest gap between consecutive token-count
+    # advances of a background stream while the arrivals prefill
+    gaps = []
+    for bg_rid in (0, 1):
+        u = uid_of[bg_rid]
+        stamps = [t_arrival]
+        prev = None
+        for e in res.events:
+            if e.uid != u or e.kind != "progress":
                 continue
-            c = int(counts[slot])
-            if req.uid in (u_long, u_short) and c > 0 \
-                    and req.uid not in ttft:
-                ttft[req.uid] = now - t0
-            if req.uid in bg and c != prev.get(req.uid):
-                # the first post-arrival gap IS the admission stall the
-                # background stream suffered
-                gaps.append(now - last_emit[req.uid])
-                prev[req.uid] = c
-                last_emit[req.uid] = now
-    eng.run_to_completion()                  # drain for the next phase
+            if prev is None or e.data["count"] != prev:
+                prev = e.data["count"]
+                if e.t <= t_first:
+                    stamps.append(e.t)
+        gaps += [b - a for a, b in zip(stamps, stamps[1:])]
     return {"ttft_short": ttft[u_short], "ttft_long": ttft[u_long],
-            "bg_itl_max": max(gaps), "steps_to_first_tokens": steps}
+            "bg_itl_max": max(gaps),
+            "steps_to_first_tokens":
+                max(e.step for e in firsts) - arrival.step}
 
 
 def correctness_pass(cfg, params, policies, max_batch, max_len, chunk,
@@ -111,19 +119,18 @@ def correctness_pass(cfg, params, policies, max_batch, max_len, chunk,
     """Replay one mixed trace on both engines: greedy streams must be
     bit-identical; also yields drain throughput at equal memory."""
     rng = np.random.RandomState(seed)
-    trace = [_prompt(rng, 3 * max_len // 4), _prompt(rng, 5),
-             _prompt(rng, max_len // 4), _prompt(rng, 9),
-             _prompt(rng, max_len // 2), _prompt(rng, 12)]
+    prompts = [_prompt(rng, 3 * max_len // 4), _prompt(rng, 5),
+               _prompt(rng, max_len // 4), _prompt(rng, 9),
+               _prompt(rng, max_len // 2), _prompt(rng, 12)]
+    trace = scripted_trace([(0, p, max_new) for p in prompts],
+                           name="correctness")
     out = {}
     for policy in policies:
         eng = build(cfg, params, policy, max_batch, max_len, chunk, budget)
-        uids = [eng.submit(p, max_new_tokens=max_new) for p in trace]
-        t0 = time.perf_counter()
-        done = {r.uid: r.generated for r in eng.run_to_completion()}
-        wall = time.perf_counter() - t0
-        toks = sum(len(v) for v in done.values())
-        out[policy] = {"streams": [done[u] for u in uids],
-                       "toks_per_s": toks / wall,
+        res = replay(eng, trace)
+        done = {res.uid_to_rid[r.uid]: r.generated for r in res.finished}
+        out[policy] = {"streams": [done[rid] for rid in range(len(prompts))],
+                       "toks_per_s": res.metrics.tokens_per_s,
                        "compilations": dict(eng.compilations())}
     assert out[policies[0]]["streams"] == out[policies[1]]["streams"], \
         "chunked streams diverged from the bucketed baseline"
@@ -179,19 +186,19 @@ def run(arch: str, layers: int | None, max_batch: int, max_len: int,
           f"background decode stall shrinks "
           f"{speedups['bg_itl_max_warm']:.2f}x; streams bit-identical")
 
-    payload = {
-        "benchmark": "chunked_prefill",
-        "arch": cfg.name,
-        "config": {"max_batch": max_batch, "max_len": max_len,
-                   "chunk_size": chunk, "token_budget": budget,
-                   "max_new": max_new},
-        "results": results,
-        "speedups": speedups,
-        "drain_toks_per_s": {p: check[p]["toks_per_s"] for p in policies},
-        "compilations": {p: check[p]["compilations"] for p in policies},
-        "streams_bit_identical": True,
-    }
-    append_json(out_json, "chunked_prefill", payload)
+    payload = write_payload(
+        out_json, "chunked_prefill", arch=cfg.name,
+        config={"max_batch": max_batch, "max_len": max_len,
+                "chunk_size": chunk, "token_budget": budget,
+                "max_new": max_new},
+        results={
+            "phases": results,
+            "speedups": speedups,
+            "drain_toks_per_s": {p: check[p]["toks_per_s"]
+                                 for p in policies},
+            "compilations": {p: check[p]["compilations"] for p in policies},
+            "streams_bit_identical": True,
+        })
     print(f"  wrote {out_json} (key 'chunked_prefill')")
     if require_speedup is not None:
         got = speedups["ttft_short_warm"]

@@ -27,9 +27,9 @@ import jax
 import numpy as np
 
 try:                                   # package form (benchmarks.run)
-    from benchmarks._util import append_json
+    from benchmarks._util import write_payload
 except ModuleNotFoundError:            # direct script invocation
-    from _util import append_json
+    from _util import write_payload
 
 from repro.configs import REGISTRY, reduced
 from repro.core.kv_quant import CacheCodec
@@ -138,21 +138,22 @@ def run(arch: str, layers: int | None, head_dim: int, max_len: int,
             f"int8 cache peak concurrency gain {gain:.2f}x below the "
             f"required {require_gain:.2f}x at equal HBM")
 
-    payload = {
-        "benchmark": "quantized_cache",
-        "arch": cfg.name,
-        "config": {"head_dim": hd, "max_len": max_len,
-                   "block_size": block_size, "budget_bytes": budget_bytes,
-                   "num_blocks": {k: int(v) for k, v in num_blocks.items()},
-                   "requests": n_requests},
+    results_out = {
         "peak_concurrency": {"compute": f["peak"], "int8": q["peak"]},
         "steps_to_drain": {"compute": f["steps"], "int8": q["steps"]},
         "concurrency_gain": gain,
         "drain_speedup": drain,
         "identical_stream_fraction": same_frac,
     }
+    payload = {"benchmark": "quantized_cache", "results": results_out}
     if out_json:
-        append_json(out_json, "quantized_cache", payload)
+        payload = write_payload(
+            out_json, "quantized_cache", arch=cfg.name,
+            config={"head_dim": hd, "max_len": max_len,
+                    "block_size": block_size, "budget_bytes": budget_bytes,
+                    "num_blocks": {k: int(v) for k, v in num_blocks.items()},
+                    "requests": n_requests},
+            results=results_out)
         print(f"  appended to {out_json}")
     return payload
 

@@ -11,6 +11,7 @@
   serving — chunked prefill vs bucketed (TTFT / tok/s; BENCH_serving.json)
   qcache  — int8 vs bf16 KV cache at equal HBM (concurrency / drain)
   prefix  — prefix-cached pool vs no sharing (warm TTFT / concurrency)
+  harness — tuned spec vs naive default at equal memory (load harness)
 """
 from __future__ import annotations
 
@@ -19,9 +20,9 @@ import time
 import traceback
 
 from benchmarks import (chunked_prefill, fig5_tilesize, fig8_heads,
-                        fig11_portability, fig12_roofline, multi_topology,
-                        prefix_cache, quantized_cache, table1_throughput,
-                        table2_analytical)
+                        fig11_portability, fig12_roofline, load_harness,
+                        multi_topology, prefix_cache, quantized_cache,
+                        table1_throughput, table2_analytical)
 
 
 def _fleet():
@@ -37,16 +38,17 @@ def _serving():
                             max_len=64, chunk=16, budget=32, max_new=4,
                             require_speedup=None,
                             out_json="BENCH_serving.json")
+    res = r["results"]
     yield "metric,bucketed,chunked"
     for key in ("ttft_short", "ttft_long"):
-        yield (f"{key}_warm,{r['results']['bucketed']['warm'][key]:.4f},"
-               f"{r['results']['chunked']['warm'][key]:.4f}")
+        yield (f"{key}_warm,{res['phases']['bucketed']['warm'][key]:.4f},"
+               f"{res['phases']['chunked']['warm'][key]:.4f}")
     yield ("drain_toks_per_s,"
-           f"{r['drain_toks_per_s']['bucketed']:.1f},"
-           f"{r['drain_toks_per_s']['chunked']:.1f}")
+           f"{res['drain_toks_per_s']['bucketed']:.1f},"
+           f"{res['drain_toks_per_s']['chunked']:.1f}")
     yield ("prefill_compilations,"
-           f"{r['compilations']['bucketed']['prefill']},"
-           f"{r['compilations']['chunked']['prefill']}")
+           f"{res['compilations']['bucketed']['prefill']},"
+           f"{res['compilations']['chunked']['prefill']}")
 
 
 def _qcache():
@@ -55,12 +57,13 @@ def _qcache():
                             n_requests=36, max_batch=48, require_gain=1.8,
                             out_json="BENCH_serving.json",
                             require_identical=1.0)
+    res = r["results"]
     yield "metric,bf16_cache,int8_cache"
-    yield (f"peak_concurrency,{r['peak_concurrency']['compute']},"
-           f"{r['peak_concurrency']['int8']}")
-    yield (f"steps_to_drain,{r['steps_to_drain']['compute']},"
-           f"{r['steps_to_drain']['int8']}")
-    yield f"concurrency_gain,1.00,{r['concurrency_gain']:.2f}"
+    yield (f"peak_concurrency,{res['peak_concurrency']['compute']},"
+           f"{res['peak_concurrency']['int8']}")
+    yield (f"steps_to_drain,{res['steps_to_drain']['compute']},"
+           f"{res['steps_to_drain']['int8']}")
+    yield f"concurrency_gain,1.00,{res['concurrency_gain']:.2f}"
 
 
 def _prefix():
@@ -68,14 +71,37 @@ def _prefix():
                          block_size=8, num_blocks=40, n_requests=15,
                          max_batch=24, require_ttft=2.0, require_peak=1.5,
                          out_json="BENCH_serving.json")
+    res = r["results"]
     yield "metric,sharing_off,sharing_on"
-    yield (f"warm_ttft_s,{r['warm_ttft']['sharing-off']['seconds']:.4f},"
-           f"{r['warm_ttft']['sharing-on']['seconds']:.4f}")
-    yield (f"peak_concurrency,{r['peak_concurrency']['sharing-off']},"
-           f"{r['peak_concurrency']['sharing-on']}")
-    yield (f"steps_to_drain,{r['steps_to_drain']['sharing-off']},"
-           f"{r['steps_to_drain']['sharing-on']}")
-    yield f"identical_streams,{r['identical_streams']},="
+    yield (f"warm_ttft_s,{res['warm_ttft']['sharing-off']['seconds']:.4f},"
+           f"{res['warm_ttft']['sharing-on']['seconds']:.4f}")
+    yield (f"peak_concurrency,{res['peak_concurrency']['sharing-off']},"
+           f"{res['peak_concurrency']['sharing-on']}")
+    yield (f"steps_to_drain,{res['steps_to_drain']['sharing-off']},"
+           f"{res['steps_to_drain']['sharing-on']}")
+    yield f"identical_streams,{res['identical_streams']},="
+
+
+def _harness():
+    r = load_harness.run(arch="qwen1.5-0.5b", layers=1, n_requests=24,
+                         burst_size=12, gap_steps=16, max_len=64, max_new=4,
+                         naive_batch=8, slo_ttft_steps=12,
+                         require_goodput_gain=1.2,
+                         out_json="BENCH_serving.json")
+    res = r["results"]
+    m = res["metrics"]
+    yield "metric,naive,tuned"
+    yield (f"goodput_req_per_1k_steps,"
+           f"{m['naive']['goodput_req_per_1k_steps']:.1f},"
+           f"{m['tuned']['goodput_req_per_1k_steps']:.1f}")
+    yield (f"slo_met,{m['naive']['n_slo_met']}/{m['naive']['n_requests']},"
+           f"{m['tuned']['n_slo_met']}/{m['tuned']['n_requests']}")
+    yield (f"ttft_steps_p99,{m['naive']['ttft_steps_p99']},"
+           f"{m['tuned']['ttft_steps_p99']}")
+    yield (f"peak_concurrency,{m['naive']['peak_concurrency']},"
+           f"{m['tuned']['peak_concurrency']}")
+    yield f"goodput_gain,1.00,{res['goodput_gain']:.2f}"
+    yield f"bit_reproducible,=,{res['bit_reproducible']}"
 
 
 SECTIONS = [
@@ -89,6 +115,7 @@ SECTIONS = [
     ("serving", _serving),
     ("qcache", _qcache),
     ("prefix", _prefix),
+    ("harness", _harness),
 ]
 
 

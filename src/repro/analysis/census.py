@@ -52,6 +52,7 @@ class MatrixPoint:
     policy: str = "bucketed"         # SchedulerSpec.policy
     fleet: bool = False              # multi-topology (maxima) mode
     prefix_cache: bool = False       # MemorySpec.prefix_cache
+    harness: bool = False            # drive via repro.harness.replay
 
 
 def support_matrix() -> tuple[MatrixPoint, ...]:
@@ -92,6 +93,11 @@ def support_matrix() -> tuple[MatrixPoint, ...]:
                     kv_dtype="int8", policy="chunked", prefix_cache=True),
         MatrixPoint("fleet-paged-prefix-chunked", cache_layout="paged",
                     policy="chunked", fleet=True, prefix_cache=True),
+        # the load harness replays a seeded bursty trace through the
+        # lifecycle-event path — proves event emission + metric reduction
+        # ride the same once-compiled programs as direct submission
+        MatrixPoint("gqa-paged-harness-chunked", cache_layout="paged",
+                    policy="chunked", harness=True),
     )
 
 
@@ -157,8 +163,43 @@ def run_point(point: MatrixPoint) -> dict[str, Any]:
     trie registers a prompt at prefill completion, so the first wave
     must drain before the second can hit) and additionally assert that
     sharing actually occurred — a silent all-miss would vacuously pass
-    the compile-count check."""
+    the compile-count check.
+
+    Harness points replay a seeded bursty trace through
+    ``repro.harness.replay`` instead of submitting directly, so the
+    census also covers the lifecycle-event emission path; the record
+    carries the step-based (deterministic) harness metrics."""
     eng = build_engine(point)
+    if point.harness:
+        from repro.harness import bursty_trace, replay
+
+        trace = bursty_trace(8, burst_size=4, gap_steps=6, max_len=24,
+                             max_new=3, seed=13)
+        res = replay(eng, trace)
+        comp = eng.compilations
+        m = res.metrics
+        record = {
+            "compilations": {"decode": comp["decode"],
+                             "prefill": comp["prefill"],
+                             "prefill_buckets": comp["prefill_buckets"]},
+            "completed": len(res.finished),
+            "fingerprint": fingerprint_decode(eng),
+            "harness": {"n_finished": m.n_finished,
+                        "peak_concurrency": m.peak_concurrency,
+                        "steps": m.steps,
+                        "ttft_steps_p50": m.ttft_steps_p50,
+                        "ttft_steps_p99": m.ttft_steps_p99},
+        }
+        if comp["decode"] != 1:
+            record["violation"] = (f"decode compiled {comp['decode']}x "
+                                   "(the one-compilation invariant)")
+        if comp["prefill"] != 1:
+            record["violation"] = (f"chunked prefill compiled "
+                                   f"{comp['prefill']}x")
+        if m.n_finished != len(trace):
+            record["violation"] = (f"harness replay finished "
+                                   f"{m.n_finished}/{len(trace)} requests")
+        return record
     done = []
     if point.prefix_cache:
         shared = list(range(1, 17))            # two full 8-token blocks

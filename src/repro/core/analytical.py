@@ -419,6 +419,33 @@ def kv_cache_bytes(cfg: "ArchConfig", seq_len: int, batch: int,
     return total * batch
 
 
+def kv_bytes_per_token(cfg: "ArchConfig", kv_dtype: str = "compute") -> int:
+    """Decode-cache bytes one cached token costs, across all layers.
+
+    The per-token unit the autotuner sizes cache pools with: a dense
+    cache holds ``max_batch * max_len`` of them, a paged pool
+    ``num_blocks * block_size``.  ``kv_dtype="int8"`` accounts the
+    ``core.kv_quant`` codec rows (int8 values + one f32 scale per
+    (position, kv-head) row) instead of bf16 values.
+
+    Only attention KV/latent caches have a per-token cost; recurrent
+    families (SSM / RG-LRU hybrid) carry per-*sequence* state and the
+    enc-dec cross cache is per-encoder-token — use
+    :func:`kv_cache_bytes` for those.
+    """
+    if cfg.family in ("ssm", "hybrid") or cfg.encdec is not None:
+        raise ValueError(
+            f"family {cfg.family!r} has no per-token KV cache (its decode "
+            "state is per-sequence or encoder-sided); use kv_cache_bytes")
+    if cfg.mla is not None:
+        width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        per_layer = (width + 4) if kv_dtype == "int8" else 2 * width
+        return cfg.num_layers * per_layer
+    hd = cfg.resolved_head_dim
+    per_row = (hd + 4) if kv_dtype == "int8" else 2 * hd
+    return cfg.num_layers * 2 * cfg.num_kv_heads * per_row
+
+
 def weight_bytes(cfg: "ArchConfig", dtype_bytes: int = 2) -> int:
     return arch_param_count(cfg) * dtype_bytes
 

@@ -413,6 +413,21 @@ class RuntimeSpec:
         exact equality is a fit (the maxima topology itself runs)."""
         return not self.violations(maxima)
 
+    # ------------------------------------------------------------------
+    # Analytical autotuning (the paper's resource allocator)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def tuned(arch: ArchConfig, device_profile=None, workload=None,
+              **kw) -> "RuntimeSpec":
+        """The predicted-best spec for ``arch`` on a device and workload,
+        ranked by the ``core.analytical`` roofline model under a
+        cache-memory budget.  Thin front door over
+        ``repro.harness.tune.tune`` (which also exposes the full
+        ranking); see that module for the knobs ``**kw`` accepts
+        (``max_len``, ``execution``, ``allow_int8_kv``, ``maxima``)."""
+        from repro.harness.tune import tune   # core must not import harness
+        return tune(arch, device=device_profile, workload=workload, **kw).spec
+
 
 # ---------------------------------------------------------------------------
 # Fleet maxima

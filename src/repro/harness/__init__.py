@@ -1,0 +1,30 @@
+"""Trace-driven load harness + analytical autotuner.
+
+Closes ADAPTOR's resource-allocation loop for the serving stack:
+
+* ``harness.trace``   — seeded synthetic request traces (Poisson, bursty,
+  shared-prefix, multi-model fleet) with a versioned on-disk format, so
+  every benchmark replays the exact same request sequence.
+* ``harness.driver``  — replay any trace against a configured
+  ``ServingEngine`` via the engine's structured lifecycle events.
+* ``harness.metrics`` — reduce lifecycle events to SLO metrics: TTFT and
+  ITL p50/p99, goodput under an SLO, peak concurrency, preemption and
+  prefix-hit counts.  Step-based metrics are bit-reproducible.
+* ``harness.tune``    — rank candidate ``RuntimeSpec`` points with the
+  ``core.analytical`` roofline model under a memory budget
+  (``RuntimeSpec.tuned(arch, device_profile)`` is the front door).
+"""
+from repro.harness.driver import ReplayResult, replay
+from repro.harness.metrics import SLO, HarnessMetrics, reduce_events
+from repro.harness.trace import (Trace, TraceRequest, bursty_trace,
+                                 fleet_trace, load_trace, poisson_trace,
+                                 save_trace, scripted_trace,
+                                 shared_prefix_trace)
+from repro.harness.tune import DeviceProfile, WorkloadProfile, tune
+
+__all__ = [
+    "SLO", "DeviceProfile", "HarnessMetrics", "ReplayResult", "Trace",
+    "TraceRequest", "WorkloadProfile", "bursty_trace", "fleet_trace",
+    "load_trace", "poisson_trace", "reduce_events", "replay", "save_trace",
+    "scripted_trace", "shared_prefix_trace", "tune",
+]

@@ -1,0 +1,334 @@
+"""Analytical autotuner: rank runtime configurations before running any.
+
+This is the reproduction of ADAPTOR's resource allocator (§5): the
+paper sizes tile counts and BRAM partitions from a closed-form model of
+the target platform; here the same ``core.analytical`` roofline model
+sizes the serving runtime's free knobs — cache layout (dense vs paged),
+pool geometry (``block_size`` / ``num_blocks`` / ``max_batch``),
+scheduler (``chunk_size`` / ``token_budget``), prefix caching — under a
+cache-memory budget, for a described workload.
+
+The tuner is *pre-execution* arithmetic: it never builds an engine.  Its
+objective is deliberately coarse — a queueing sketch on top of
+``analytical_step_seconds`` — because ranking, not absolute seconds, is
+what matters (the calibration test in ``tests/test_analytical.py`` pins
+exactly that: the model's config ranking matches measured fused-step
+times).  The harness then *measures* the chosen spec against the naive
+default (``benchmarks/load_harness.py``), closing the loop the paper
+closes with its AXI timers.
+
+Front doors::
+
+    spec = RuntimeSpec.tuned(arch, device_profile=DeviceProfile(...),
+                             workload=WorkloadProfile.from_trace(trace))
+    result = tune(arch, device=..., workload=...)   # ranked candidates
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.analytical import (V5E, TPUSpec, analytical_step_seconds,
+                                   kv_bytes_per_token, weight_bytes)
+from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
+                             RuntimeSpec, SchedulerSpec)
+
+# Enumerated knob grids.  Small on purpose: the analytical model makes
+# each point ~free, but the benchmark that *verifies* the winner is not.
+_BLOCK_SIZES = (8, 16, 32)
+_CHUNK_SIZES = (16, 32, 64)
+_BUDGET_MULT = (2, 4, 8)
+_MAX_BATCH_CAP = 64          # host-side per-slot bookkeeping ceiling
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """The target platform, plus how much of its HBM the KV cache may
+    use.  ``cache_budget_bytes`` pins the budget directly (the
+    equal-memory comparisons in benchmarks do this); ``None`` derives it
+    as ``cache_fraction`` of HBM left after weights."""
+
+    tpu: TPUSpec = V5E
+    n_chips: int = 1
+    cache_fraction: float = 0.4
+    cache_budget_bytes: int | None = None
+
+    def budget(self, arch: ArchConfig, dtype_bytes: int = 2) -> int:
+        if self.cache_budget_bytes is not None:
+            return self.cache_budget_bytes
+        free = self.n_chips * self.tpu.hbm_bytes - weight_bytes(
+            arch, dtype_bytes)
+        return max(int(self.cache_fraction * free), 0)
+
+
+@dataclass(frozen=True)
+class WorkloadProfile:
+    """What the traffic looks like — the trace distilled to the moments
+    the tuner's queueing sketch needs."""
+
+    mean_prompt_len: float = 64.0
+    max_prompt_len: int = 128
+    mean_new_tokens: float = 8.0
+    burst_size: int = 8              # peak simultaneous arrivals
+    shared_prefix_frac: float = 0.0  # fraction of requests sharing a prefix
+    shared_prefix_len: int = 0       # tokens of that shared prefix
+
+    @staticmethod
+    def from_trace(trace) -> "WorkloadProfile":
+        arrivals: dict[int, int] = {}
+        for r in trace.requests:
+            arrivals[r.arrival_step] = arrivals.get(r.arrival_step, 0) + 1
+        meta = trace.meta
+        return WorkloadProfile(
+            mean_prompt_len=trace.mean_prompt_len,
+            max_prompt_len=trace.max_prompt_len,
+            mean_new_tokens=trace.mean_new_tokens,
+            burst_size=max(arrivals.values()),
+            shared_prefix_frac=meta.get("shared_frac", 0.0),
+            shared_prefix_len=meta.get("prefix_len", 0))
+
+    @property
+    def effective_prompt_len(self) -> float:
+        """Mean prompt tokens that must actually be prefilled once a
+        prefix cache absorbs the shared span."""
+        saved = self.shared_prefix_frac * min(self.shared_prefix_len,
+                                              self.mean_prompt_len)
+        return max(self.mean_prompt_len - saved, 1.0)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One scored configuration point."""
+
+    spec: RuntimeSpec
+    score: float                 # requests per predicted second (higher wins)
+    predicted_latency_s: float
+    predicted_ttft_s: float
+    predicted_itl_s: float
+    cache_bytes: int
+    max_batch: int
+
+    def summary(self) -> dict:
+        m, s = self.spec.memory, self.spec.scheduler
+        return {"cache_layout": m.cache_layout, "max_batch": m.max_batch,
+                "block_size": m.block_size if m.cache_layout == "paged" else None,
+                "num_blocks": m.resolved_num_blocks if m.cache_layout == "paged" else None,
+                "kv_dtype": m.kv_dtype, "prefix_cache": m.prefix_cache,
+                "policy": s.policy, "chunk_size": s.chunk_size,
+                "token_budget": s.resolved_token_budget,
+                "score": self.score, "cache_bytes": self.cache_bytes,
+                "predicted_ttft_s": self.predicted_ttft_s,
+                "predicted_itl_s": self.predicted_itl_s}
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    """The winner plus the full ranking (transparency for benchmarks)."""
+
+    spec: RuntimeSpec
+    best: Candidate
+    ranked: tuple[Candidate, ...]    # best first
+    budget_bytes: int
+
+
+def _per_token_bytes(arch: ArchConfig, kv_dtype: str, maxima) -> int:
+    """Cache bytes per token: the arch's own geometry, or — under a
+    fleet ``maxima`` — the maxima-shaped rows the shared pool actually
+    allocates (``DecodeFabric.kv_bytes_per_token``: a small member in a
+    big fabric still pays maxima-sized cache)."""
+    if maxima is not None:
+        hd = maxima.head_dim_max
+        per_row = hd + 4 if kv_dtype == "int8" else 2 * hd
+        return 2 * maxima.layers_enc_max * maxima.heads_max * per_row
+    return kv_bytes_per_token(arch, kv_dtype)
+
+
+def cache_bytes(spec: RuntimeSpec) -> int:
+    """KV-cache bytes a spec provisions (the equal-memory yardstick)."""
+    per_tok = _per_token_bytes(spec.arch, spec.memory.kv_dtype, spec.maxima)
+    m = spec.memory
+    if m.cache_layout == "paged":
+        return m.resolved_num_blocks * m.block_size * per_tok
+    return m.max_batch * m.max_len * per_tok
+
+
+def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
+             workload: WorkloadProfile, dtype_bytes: int) -> tuple[float, float, float]:
+    """(ttft_s, itl_s, latency_s) queueing sketch for one candidate.
+
+    Coarse by design: decode cost from the roofline at the candidate's
+    batch, prefill cost from the roofline at its per-step grant, queue
+    effects from how many of a burst fit.  Monotone in the knobs that
+    matter (bigger batch amortizes weight reads; bigger grants finish
+    prompts in fewer steps but each step costs more; prefix caching
+    shrinks the prompt work) — which is all a *ranking* objective needs.
+    """
+    tpu, chips = device.tpu, device.n_chips
+    B = cand.memory.max_batch
+    eff_prompt = workload.effective_prompt_len if cand.memory.prefix_cache \
+        else workload.mean_prompt_len
+    kv_depth = int(eff_prompt + workload.mean_new_tokens)
+    t_decode = analytical_step_seconds(
+        arch, ShapeSpec("tune_decode", kv_depth, B, "decode"),
+        chips, tpu, dtype_bytes).t_total
+    concurrent = max(1, min(B, workload.burst_size))
+    if cand.scheduler.policy == "chunked":
+        grant = min(cand.scheduler.resolved_token_budget,
+                    max(int(eff_prompt), cand.scheduler.chunk_size))
+        t_pre = analytical_step_seconds(
+            arch, ShapeSpec("tune_chunk", grant, 1, "prefill"),
+            chips, tpu, dtype_bytes).t_total
+        t_mixed = t_decode + t_pre
+        share = cand.scheduler.resolved_token_budget / concurrent
+        ttft_steps = eff_prompt / max(share, 1.0)
+        ttft = ttft_steps * t_mixed
+        prefill_steps = concurrent * eff_prompt \
+            / cand.scheduler.resolved_token_budget
+        frac = prefill_steps / max(prefill_steps + workload.mean_new_tokens,
+                                   1.0)
+        itl = frac * t_mixed + (1.0 - frac) * t_decode
+    else:
+        # bucketed: one B=1 prefill dispatch per request, decode stalls
+        # behind it, and a burst larger than the batch waits whole turns
+        t_pre = analytical_step_seconds(
+            arch, ShapeSpec("tune_prefill", max(int(eff_prompt), 1), 1,
+                            "prefill"), chips, tpu, dtype_bytes).t_total
+        waves = math.ceil(concurrent / B)
+        ttft = waves * t_pre
+        itl = t_decode + concurrent * t_pre / max(
+            workload.mean_new_tokens * B, 1.0)
+    latency = ttft + workload.mean_new_tokens * itl
+    return ttft, itl, latency
+
+
+def _candidates(arch: ArchConfig, device: DeviceProfile,
+                workload: WorkloadProfile, max_len: int, budget: int,
+                execution: ExecutionSpec, kv_dtypes: tuple[str, ...],
+                maxima) -> list[RuntimeSpec]:
+    chunkable = arch.family in CHUNKABLE_FAMILIES
+    pageable = arch.family in ("dense", "vlm", "moe")
+    live_tokens = workload.effective_prompt_len + workload.mean_new_tokens
+    out: list[RuntimeSpec] = []
+
+    def add(memory: MemorySpec, scheduler: SchedulerSpec) -> None:
+        try:
+            out.append(RuntimeSpec(arch=arch, maxima=maxima,
+                                   execution=execution, memory=memory,
+                                   scheduler=scheduler))
+        except ValueError:
+            pass    # geometry the spec itself rejects is not a candidate
+
+    for kv_dtype in kv_dtypes:
+        per_tok = _per_token_bytes(arch, kv_dtype, maxima)
+        # dense: every slot pre-pays max_len tokens
+        dense_b = min(budget // (max_len * per_tok), _MAX_BATCH_CAP)
+        if dense_b >= 1:
+            mem = MemorySpec(cache_layout="dense", max_batch=int(dense_b),
+                             max_len=max_len, kv_dtype=kv_dtype)
+            add(mem, SchedulerSpec(policy="bucketed"))
+            if chunkable:
+                for chunk in _CHUNK_SIZES:
+                    if chunk > max_len:
+                        continue
+                    for mult in _BUDGET_MULT:
+                        add(mem, SchedulerSpec(policy="chunked",
+                                               chunk_size=chunk,
+                                               token_budget=mult * chunk))
+        if not (pageable and chunkable):
+            continue
+        # paged: the pool holds live tokens, not worst-case rectangles
+        pool_tokens = budget // per_tok
+        for bs in _BLOCK_SIZES:
+            if max_len % bs:
+                continue
+            num_blocks = pool_tokens // bs
+            if num_blocks * bs < max_len:
+                continue        # could never admit one full request
+            # per-request block rounding means live_tokens understates
+            # true occupancy; round up to whole blocks before dividing
+            per_req = math.ceil(live_tokens / bs) * bs
+            paged_b = int(min(pool_tokens // per_req, _MAX_BATCH_CAP))
+            if paged_b < 1:
+                continue
+            num_blocks = min(num_blocks,
+                             paged_b * math.ceil(max_len / bs) * 2)
+            if num_blocks * bs * per_tok > budget:
+                num_blocks = budget // (bs * per_tok)
+            prefixes = (False, True) if workload.shared_prefix_frac > 0.0 \
+                else (False,)
+            for prefix in prefixes:
+                mem = MemorySpec(cache_layout="paged", max_batch=paged_b,
+                                 max_len=max_len, block_size=bs,
+                                 num_blocks=int(num_blocks),
+                                 kv_dtype=kv_dtype, prefix_cache=bool(prefix))
+                for chunk in _CHUNK_SIZES:
+                    if chunk % bs or chunk > max_len:
+                        continue
+                    for mult in _BUDGET_MULT:
+                        add(mem, SchedulerSpec(policy="chunked",
+                                               chunk_size=chunk,
+                                               token_budget=mult * chunk))
+    return out
+
+
+def tune(arch: ArchConfig, device: DeviceProfile | None = None,
+         workload: WorkloadProfile | None = None, *,
+         max_len: int | None = None, execution: ExecutionSpec | None = None,
+         allow_int8_kv: bool = False, maxima=None) -> TuneResult:
+    """Rank candidate runtime configurations for ``arch`` and return the
+    predicted-best under the device's cache-memory budget.
+
+    ``allow_int8_kv`` gates the int8 cache codec into the search: it is
+    numerics-changing (quantize-on-write), so the tuner only trades
+    capacity against it when explicitly allowed.  ``execution`` (kernel
+    backend, weight quant, dtypes) is passed through unsearched — kernel
+    routing is benchmarked separately and is workload-independent.
+    """
+    device = device or DeviceProfile()
+    workload = workload or WorkloadProfile()
+    execution = execution or ExecutionSpec()
+    if max_len is None:
+        need = workload.max_prompt_len + int(workload.mean_new_tokens) * 2
+        max_len = max(64, 1 << (need - 1).bit_length())
+    dtype_bytes = 1 if execution.quant == "int8" else 2
+    budget = device.budget(arch, dtype_bytes)
+    kv_dtypes = ("compute", "int8") if (
+        allow_int8_kv and arch.family in ("dense", "vlm", "moe")) \
+        else ("compute",)
+    cands = _candidates(arch, device, workload, max_len, budget,
+                        execution, kv_dtypes, maxima)
+    if not cands:
+        raise ValueError(
+            f"no feasible configuration for {arch.family!r} arch under a "
+            f"{budget}-byte cache budget at max_len={max_len}: even one "
+            "slot does not fit; raise the budget or shrink max_len")
+    scored = []
+    for spec in cands:
+        ttft, itl, latency = _predict(arch, spec, device, workload,
+                                      dtype_bytes)
+        scored.append(Candidate(
+            spec=spec, score=spec.memory.max_batch / latency,
+            predicted_latency_s=latency, predicted_ttft_s=ttft,
+            predicted_itl_s=itl, cache_bytes=cache_bytes(spec),
+            max_batch=spec.memory.max_batch))
+    # deterministic ranking: score desc, then the smaller provisioned
+    # pool wins ties, then the summary repr as a total order
+    scored.sort(key=lambda c: (-c.score, c.cache_bytes, repr(c.summary())))
+    return TuneResult(spec=scored[0].spec, best=scored[0],
+                      ranked=tuple(scored), budget_bytes=budget)
+
+
+def naive_default(arch: ArchConfig, tuned: RuntimeSpec) -> RuntimeSpec:
+    """The hand-picked baseline at *equal memory*: dense layout with the
+    stock ``MemorySpec`` batch, shrunk or grown along ``max_batch`` until
+    its cache pays the same bytes as ``tuned``'s pool (so any goodput
+    win is allocation, not extra HBM)."""
+    per_tok = _per_token_bytes(arch, "compute", tuned.maxima)
+    m = tuned.memory
+    b = max(cache_bytes(tuned) // (m.max_len * per_tok), 1)
+    return RuntimeSpec(
+        arch=arch, maxima=tuned.maxima, execution=tuned.execution,
+        memory=MemorySpec(cache_layout="dense", max_batch=int(b),
+                          max_len=m.max_len),
+        scheduler=SchedulerSpec(policy="auto"))

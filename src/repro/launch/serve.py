@@ -9,6 +9,13 @@ Multi-topology mode: ``--fleet qwen1.5-0.5b,codeqwen1.5-7b`` serves
 several architectures from ONE compiled decode step — shared maxima are
 planned with ``maxima_for``, each model is packed into the fabric's
 weight table, and requests carry a model id.
+
+Harness mode: ``--trace t.jsonl`` replays an on-disk trace (see
+``repro.harness.trace``) through the engine instead of the demo mix and
+prints the reduced TTFT/ITL/goodput metrics; ``--tuned`` discards the
+hand-picked memory/scheduler flags and lets the analytical autotuner
+(``RuntimeSpec.tuned``) choose them — from the trace's own statistics
+when ``--trace`` is also given.
 """
 from __future__ import annotations
 
@@ -62,7 +69,20 @@ def main() -> None:
                     help="share prompt-prefix KV blocks across requests "
                          "(requires --cache-layout paged; rejected at spec "
                          "construction otherwise)")
+    ap.add_argument("--trace", default=None,
+                    help="replay this on-disk trace (repro.harness.trace "
+                         "format) instead of the demo request mix and print "
+                         "harness metrics")
+    ap.add_argument("--tuned", action="store_true",
+                    help="ignore the memory/scheduler flags and let the "
+                         "analytical autotuner pick them (uses the trace's "
+                         "workload statistics when --trace is given)")
+    ap.add_argument("--slo-ttft-steps", type=int, default=None,
+                    help="with --trace: count a request toward goodput only "
+                         "if its first token lands within this many steps")
     args = ap.parse_args()
+    if args.tuned and args.fleet:
+        ap.error("--tuned tunes a single architecture; drop --fleet")
 
     names = (args.fleet.split(",") if args.fleet else [args.arch])
     cfgs = [reduced(REGISTRY[n]) for n in names]
@@ -77,16 +97,34 @@ def main() -> None:
         ex_kw["compute_dtype"] = args.compute_dtype
     if args.quant_min_size is not None:
         ex_kw["quant_min_size"] = args.quant_min_size
-    spec = RuntimeSpec(
-        arch=cfgs[0], maxima=maxima,
-        execution=ExecutionSpec(matmul_backend=args.kernels,
-                                quant=args.quant, **ex_kw),
-        memory=MemorySpec(cache_layout=args.cache_layout,
-                          max_batch=args.max_batch, max_len=args.max_len,
-                          block_size=args.block_size,
-                          num_blocks=args.num_blocks,
-                          kv_dtype=args.kv_dtype,
-                          prefix_cache=args.prefix_cache))
+    trace = None
+    if args.trace is not None:
+        from repro.harness import load_trace
+        trace = load_trace(args.trace)
+    execution = ExecutionSpec(matmul_backend=args.kernels,
+                              quant=args.quant, **ex_kw)
+    if args.tuned:
+        from repro.harness import WorkloadProfile
+        workload = (WorkloadProfile.from_trace(trace)
+                    if trace is not None else None)
+        spec = RuntimeSpec.tuned(cfgs[0], workload=workload,
+                                 max_len=args.max_len, execution=execution,
+                                 allow_int8_kv=args.kv_dtype == "int8")
+        m = spec.memory
+        print(f"tuned spec: {m.cache_layout} max_batch={m.max_batch} "
+              f"policy={spec.scheduler.policy} "
+              f"chunk={spec.scheduler.chunk_size} "
+              f"kv_dtype={m.kv_dtype} prefix_cache={m.prefix_cache}")
+    else:
+        spec = RuntimeSpec(
+            arch=cfgs[0], maxima=maxima,
+            execution=execution,
+            memory=MemorySpec(cache_layout=args.cache_layout,
+                              max_batch=args.max_batch, max_len=args.max_len,
+                              block_size=args.block_size,
+                              num_blocks=args.num_blocks,
+                              kv_dtype=args.kv_dtype,
+                              prefix_cache=args.prefix_cache))
     eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
                         sampling=SamplingParams(temperature=args.temperature,
                                                 top_k=40))
@@ -97,35 +135,58 @@ def main() -> None:
         eng.load(Model.from_spec(spec).init(jax.random.PRNGKey(0)))
         model_ids = [0]
 
-    rng = jax.random.PRNGKey(7)
-    for i in range(args.requests):
-        rng, k = jax.random.split(rng)
-        plen = int(jax.random.randint(k, (), 4, args.max_len // 2))
-        prompt = list(range(1, plen + 1))
-        eng.submit(prompt, max_new_tokens=args.max_new,
-                   model=model_ids[i % len(model_ids)])
+    if trace is not None:
+        from repro.harness import SLO, replay
+        slo = (SLO(ttft_steps=args.slo_ttft_steps)
+               if args.slo_ttft_steps is not None else None)
+        t0 = time.time()
+        res = replay(eng, trace, slo=slo)
+        dt = time.time() - t0
+        done, m = res.finished, res.metrics
+        print(f"trace {trace.name!r} (seed {trace.seed}): "
+              f"{m.n_finished}/{m.n_requests} finished over {m.steps} "
+              f"fused steps in {dt:.1f}s ({m.tokens_per_s:,.0f} tok/s)")
+        print(f"  TTFT p50/p99 {m.ttft_steps_p50}/{m.ttft_steps_p99} steps "
+              f"({m.ttft_s_p50 * 1e3:.1f}/{m.ttft_s_p99 * 1e3:.1f} ms)   "
+              f"ITL p50/p99 {m.itl_steps_p50}/{m.itl_steps_p99} steps")
+        print(f"  peak concurrency {m.peak_concurrency}, "
+              f"{m.n_preemptions} preemptions, {m.prefix_hits} prefix hits")
+        if slo is not None:
+            print(f"  SLO (ttft<={args.slo_ttft_steps} steps): "
+                  f"{m.n_slo_met}/{m.n_requests} met, goodput "
+                  f"{m.goodput_req_per_1k_steps:.1f} req/1k-steps "
+                  f"({m.goodput_req_s:.2f} req/s)")
+    else:
+        rng = jax.random.PRNGKey(7)
+        for i in range(args.requests):
+            rng, k = jax.random.split(rng)
+            plen = int(jax.random.randint(k, (), 4, args.max_len // 2))
+            prompt = list(range(1, plen + 1))
+            eng.submit(prompt, max_new_tokens=args.max_new,
+                       model=model_ids[i % len(model_ids)])
 
-    t0 = time.time()
-    done = eng.run_to_completion(sync_every=args.sync_every)
-    dt = time.time() - t0
-    total_new = sum(len(r.generated) for r in done)
-    print(f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new / dt:,.0f} tok/s)")
+        t0 = time.time()
+        done = eng.run_to_completion(sync_every=args.sync_every)
+        dt = time.time() - t0
+        total_new = sum(len(r.generated) for r in done)
+        print(f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
+              f"({total_new / dt:,.0f} tok/s)")
     if args.fleet:
         print(f"fleet: {names} served by ONE fused step "
               f"(decode compilations = {eng.compilations['decode']})")
     print("compile accounting:", eng.compilations)
-    if args.kv_dtype == "int8":
+    if spec.memory.kv_dtype == "int8":
         hd = cfgs[0].resolved_head_dim
         print(f"int8 KV cache: {2 * hd / (hd + 4):.2f}x fewer cache "
               f"bytes/token than bf16 at head_dim={hd}")
     print(f"host traffic: {eng.stats['device_gets']} bulk device_gets over "
           f"{eng.stats['decode_steps']} fused decode steps")
-    if args.cache_layout == "paged":
+    if spec.memory.cache_layout == "paged":
         s = eng.memory_stats()
-        print(f"paged pool: {s.total_blocks} x {args.block_size}-token "
-              f"blocks, {eng.stats['preemptions']} preemptions")
-        if args.prefix_cache:
+        print(f"paged pool: {s.total_blocks} x "
+              f"{spec.memory.block_size}-token blocks, "
+              f"{eng.stats['preemptions']} preemptions")
+        if spec.memory.prefix_cache:
             print(f"prefix cache: {eng.stats['prefix_hits']} hits / "
                   f"{eng.stats['prefix_hit_tokens']} tokens skipped, "
                   f"{eng.stats['cow_forks']} CoW forks, "

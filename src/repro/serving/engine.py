@@ -84,8 +84,18 @@ from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
 from repro.kernels.runtime import interpret_default
 from repro.models import backend
 from repro.models.model import Model
+from repro.serving.events import EngineEvent, EventBus
+from repro.serving.events import now as _now
 from repro.serving.fabric import N_REGS, DecodeFabric
 from repro.serving.sampling import SamplingParams, sample_per_slot
+
+# The always-on summary counters.  These are *derived* telemetry kept for
+# backward compatibility (tests and benchmarks read them); anything
+# per-request or per-step now flows through the structured event surface
+# (``serving.events`` / ``engine.events``) instead of growing this dict.
+_STAT_KEYS = ("decode_steps", "device_gets", "harvest_elems", "preemptions",
+              "prefill_tokens", "max_step_prefill_tokens", "prefix_hits",
+              "prefix_hit_tokens", "cow_forks", "prefix_evictions")
 
 
 @dataclasses.dataclass
@@ -358,11 +368,14 @@ class ServingEngine:
         # host↔device traffic accounting (asserted O(1)/step by the tests);
         # harvest_elems counts i32 elements pulled for finished buffers —
         # bounded by the finished streams' lengths, not max_len
-        self.stats = {"decode_steps": 0, "device_gets": 0,
-                      "harvest_elems": 0, "preemptions": 0,
-                      "prefill_tokens": 0, "max_step_prefill_tokens": 0,
-                      "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "cow_forks": 0, "prefix_evictions": 0}
+        self.stats = dict.fromkeys(_STAT_KEYS, 0)
+        # structured lifecycle events (serving.events): subscribers see
+        # submit/admit/first_token/progress/finish/preempt per request.
+        # Publishing is skipped entirely while nobody subscribes.
+        self.events = EventBus()
+        # uids whose first token was already announced — a re-admission
+        # after preemption must not emit first_token twice
+        self._ft_emitted: set[int] = set()
 
         # the cache and SlotState are donated: XLA aliases the KV pool and
         # the slot buffers in place of copying them on every fused step.
@@ -402,6 +415,22 @@ class ServingEngine:
             prompt_buf=jnp.zeros((B, self.max_len), jnp.int32),
             prompt_len=jnp.zeros((B,), jnp.int32),
             pf_pos=jnp.zeros((B,), jnp.int32))
+
+    def _emit(self, kind: str, uid: int, **data) -> None:
+        """Publish one lifecycle event (no-op without subscribers).  The
+        event's logical clock is the fused-dispatch count, so event
+        arithmetic is bit-reproducible; the wall stamp is not."""
+        if self.events.active:
+            self.events.publish(EngineEvent(
+                kind, uid, self.stats["decode_steps"], _now(), data))
+
+    def _emit_first_token(self, uid: int) -> None:
+        """``first_token`` exactly once per uid — a request re-admitted
+        after preemption already announced its first token."""
+        if self.events.active and uid not in self._ft_emitted:
+            self._ft_emitted.add(uid)
+            self.events.publish(EngineEvent(
+                "first_token", uid, self.stats["decode_steps"], _now(), {}))
 
     def load(self, params) -> None:
         """Install weights (quantized here when ``spec.execution.quant``
@@ -485,6 +514,8 @@ class ServingEngine:
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
                                   eos_id, sampling, model=model))
+        self._emit("submit", self._uid, prompt_len=len(prompt),
+                   max_new_tokens=max_new_tokens, model=model)
         return self._uid
 
     # ------------------------------------------------------------------
@@ -793,6 +824,9 @@ class ServingEngine:
             self._pf[slot] = plen
             self._seq += 1
             self._admit_seq[slot] = self._seq
+            self._emit("admit", req.uid, slot=slot, cached_tokens=0)
+            # the bucketed prefill dispatch samples the first token itself
+            self._emit_first_token(req.uid)
 
     def _admit_chunked(self) -> None:
         """Token-budget admission: seat a request by *writing its prompt*
@@ -872,6 +906,7 @@ class ServingEngine:
             self._reg_done[slot] = False
             self._seq += 1
             self._admit_seq[slot] = self._seq
+            self._emit("admit", req.uid, slot=slot, cached_tokens=start)
 
     def _grant_chunks(self) -> list[int]:
         """The token-budget scheduler: up to ``token_budget`` prompt
@@ -1015,6 +1050,7 @@ class ServingEngine:
         req.slot = None
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
+        self._emit("preempt", req.uid, banked=len(req.prefix))
 
     def _dispatch(self) -> None:
         if self.paging is not None and self._tables_dirty:
@@ -1042,6 +1078,10 @@ class ServingEngine:
                 if grants[slot]:
                     self._pf[slot] += grants[slot]
                     self._idx_ub[slot] = self._pf[slot]
+                    if self._pf[slot] >= self._plen[slot]:
+                        # this dispatch's completing chunk sampled the
+                        # slot's first token (``completes`` in the step)
+                        self._emit_first_token(self.slot_req[slot].uid)
                 elif self._pf[slot] >= self._plen[slot]:
                     self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
                                              self._slot_token_cap(slot))
@@ -1088,6 +1128,11 @@ class ServingEngine:
                 self._idx_ub[i] = self._pf[i]   # mid-prefill: mirror exact
             else:
                 self._idx_ub[i] = self._plen[i] + max(int(count_h[i]) - 1, 0)
+            # completion-honest telemetry: the device_get above ordered
+            # this sync behind the dispatched steps, so these counts (and
+            # their wall stamps) reflect tokens that actually exist
+            self._emit("progress", self.slot_req[i].uid,
+                       count=int(count_h[i]))
         if not slots:
             return []
         maxc = max(int(count_h[i]) for i in slots)
@@ -1104,6 +1149,7 @@ class ServingEngine:
             if self.paging is not None:
                 self._release_slot_blocks(i)
             finished.append(req)
+            self._emit("finish", req.uid, n_generated=len(req.generated))
         return finished
 
     def step(self) -> list[Request]:

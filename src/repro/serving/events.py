@@ -1,0 +1,113 @@
+"""Structured per-request lifecycle events emitted by the serving engine.
+
+The engine used to grow an ad-hoc ``stats`` dict whenever a benchmark
+needed a new counter; anything finer-grained (when did request 17 get
+its first token?) meant another bespoke polling loop around
+``engine.step()`` with its own ``device_get``.  This module is the
+replacement: the engine publishes one :class:`EngineEvent` per request
+lifecycle transition through an :class:`EventBus`, and consumers (the
+load harness, benchmarks, tests) subscribe instead of polling.
+
+Lifecycle of one request::
+
+    submit ──> admit ──> first_token ──> progress* ──> finish
+                  └──────────── preempt ──> admit ...(re-entry)
+
+* ``submit``       — the request entered the engine queue.
+  data: ``prompt_len``, ``max_new_tokens``, ``model``.
+* ``admit``        — the request was seated in a slot.
+  data: ``slot``, ``cached_tokens`` (prefix-cache hit span, 0 otherwise).
+* ``first_token``  — the request's first token exists on device.  Under
+  the bucketed scheduler this coincides with ``admit`` (the prefill
+  dispatch samples it); under the chunked scheduler it is the fused step
+  whose chunk grant completes the prompt.
+* ``progress``     — one per occupied slot per harvest sync, carrying
+  the slot's generated-token ``count``.  Emitted *after* the harvest's
+  bulk ``device_get``, so its wall-clock stamp is completion-honest
+  (the dispatch-side stamps on ``first_token`` are not — use the first
+  ``progress`` with ``count >= 1`` for wall-clock TTFT).
+* ``finish``       — the request completed and was harvested.
+  data: ``n_generated``.
+* ``preempt``      — the slot was recompute-preempted; the request
+  re-enters admission later.  data: ``banked`` (tokens carried over).
+
+Every event carries the engine's logical clock (``step`` = fused
+dispatches so far) and a ``time.perf_counter()`` wall stamp.  Step
+arithmetic is bit-reproducible across runs; wall stamps are not — the
+harness keeps the two strictly separated for exactly that reason.
+
+The bus costs one attribute check per would-be event when nobody
+subscribed, so the engine's normal (harness-free) operation is
+unchanged; the ``stats`` counters stay as the cheap always-on summary.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+EVENT_KINDS = ("submit", "admit", "first_token", "progress", "finish",
+               "preempt")
+
+
+@dataclass(frozen=True)
+class EngineEvent:
+    """One lifecycle transition of one request."""
+
+    kind: str                 # one of EVENT_KINDS
+    uid: int                  # engine request uid
+    step: int                 # engine logical clock (fused dispatches)
+    t: float                  # wall stamp (time.perf_counter())
+    data: dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}; expected "
+                             f"one of {EVENT_KINDS}")
+
+
+class EventBus:
+    """Tiny synchronous pub/sub: subscribers are called in order, on the
+    engine's host thread, at emission time."""
+
+    def __init__(self) -> None:
+        self._subs: list[Callable[[EngineEvent], None]] = []
+
+    @property
+    def active(self) -> bool:
+        """True when at least one subscriber would see an event — the
+        engine skips event construction entirely otherwise."""
+        return bool(self._subs)
+
+    def subscribe(self, cb: Callable[[EngineEvent], None]) -> None:
+        self._subs.append(cb)
+
+    def unsubscribe(self, cb: Callable[[EngineEvent], None]) -> None:
+        self._subs.remove(cb)
+
+    def publish(self, event: EngineEvent) -> None:
+        for cb in self._subs:
+            cb(event)
+
+
+class EventLog:
+    """The standard subscriber: an append-only list with per-uid views."""
+
+    def __init__(self) -> None:
+        self.events: list[EngineEvent] = []
+
+    def __call__(self, event: EngineEvent) -> None:
+        self.events.append(event)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def of_kind(self, kind: str) -> list[EngineEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+    def of_uid(self, uid: int) -> list[EngineEvent]:
+        return [e for e in self.events if e.uid == uid]
+
+
+def now() -> float:
+    return time.perf_counter()

@@ -330,6 +330,28 @@ class DecodeFabric:
         return jax.tree.map(lambda t, r: t.at[model_id].set(r), table, row)
 
     # ------------------------------------------------------------------
+    # Capacity accounting (the harness autotuner's fleet yardstick)
+    # ------------------------------------------------------------------
+    def kv_bytes_per_token(self) -> int:
+        """HBM bytes one cached token costs in this fabric's shared pool.
+
+        The fleet analogue of ``core.analytical.kv_bytes_per_token``:
+        the pool is provisioned at the synthesized maxima
+        (``layers_enc_max`` layers x ``heads_max`` heads x the fixed
+        lane width), whatever member actually fills it — a small model
+        in a big fabric still pays maxima-shaped cache rows.
+        """
+        per_row = self.codec.bytes_per_feature_row(self.hd,
+                                                   self.compute_dtype)
+        return 2 * self.mx.layers_enc_max * self.mx.heads_max * per_row
+
+    def table_bytes(self, table: dict) -> int:
+        """Resident HBM bytes of a packed weight table (all rows,
+        quantized leaves included) — what the device budget must cover
+        before any cache is provisioned."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(table))
+
+    # ------------------------------------------------------------------
     # Decode cache (maxima-shaped; both layouts)
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int,

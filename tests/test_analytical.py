@@ -103,3 +103,63 @@ def test_analytical_step_seconds_sane():
     r = analytical_step_seconds(get_config("qwen2-72b"),
                                 SHAPES_BY_NAME["train_4k"], n_chips=256)
     assert 0.001 < r.t_total < 1000.0
+
+
+def _spearman(xs, ys):
+    """Spearman rank correlation, hand-rolled (no scipy in the image)."""
+    def ranks(vs):
+        order = sorted(range(len(vs)), key=lambda i: vs[i])
+        r = [0] * len(vs)
+        for rank, i in enumerate(order):
+            r[i] = rank
+        return r
+    rx, ry = ranks(xs), ranks(ys)
+    n = len(xs)
+    d2 = sum((a - b) ** 2 for a, b in zip(rx, ry))
+    return 1.0 - 6.0 * d2 / (n * (n * n - 1))
+
+
+def test_analytical_rank_correlates_with_measured_steps():
+    """Autotuner calibration: the roofline model's *ranking* of fused-step
+    costs must match wall measurements — ``harness.tune`` only ever
+    compares candidates, so rank order is the property that matters.
+
+    Four points on a tiny arch, adjacent predicted costs separated by
+    >=2x (total spread >=4x) so host noise cannot flip the order; the
+    measured side is min-of-5 jitted full-sequence forwards."""
+    import dataclasses
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import REGISTRY, reduced
+    from repro.configs.base import ShapeSpec
+    from repro.models.model import Model
+
+    base = reduced(REGISTRY["qwen1.5-0.5b"])
+    points = [(1, 64), (1, 512), (2, 1024), (4, 2048)]  # (layers, seq_len)
+    predicted, measured = [], []
+    for layers, seq in points:
+        cfg = dataclasses.replace(base, num_layers=layers)
+        shape = ShapeSpec(f"cal_{layers}_{seq}", seq, 1, "prefill")
+        predicted.append(analytical_step_seconds(cfg, shape,
+                                                 n_chips=1).t_total)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        fwd = jax.jit(model.forward)
+        toks = jnp.ones((1, seq), dtype=jnp.int32)
+        fwd(params, {"tokens": toks}).block_until_ready()   # compile
+        best = min(_timed(fwd, params, toks, time) for _ in range(5))
+        measured.append(best)
+    # the points are engineered to be well separated in predicted cost
+    ps = sorted(predicted)
+    assert all(b / a >= 2.0 for a, b in zip(ps, ps[1:])), predicted
+    rho = _spearman(predicted, measured)
+    assert rho >= 0.8, (rho, predicted, measured)
+
+
+def _timed(fwd, params, toks, time):
+    t0 = time.perf_counter()
+    fwd(params, {"tokens": toks}).block_until_ready()
+    return time.perf_counter() - t0
