@@ -12,20 +12,23 @@
   qcache  — int8 vs bf16 KV cache at equal HBM (concurrency / drain)
   prefix  — prefix-cached pool vs no sharing (warm TTFT / concurrency)
   harness — tuned spec vs naive default at equal memory (load harness)
+  sharded — dp x tp mesh cluster vs 1 device at equal cache/device
+
+``--devices N`` forces N host-platform devices; it must be applied
+before anything imports jax, so the benchmark modules are imported
+inside ``main`` after the flag is parsed.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 import traceback
 
-from benchmarks import (chunked_prefill, fig5_tilesize, fig8_heads,
-                        fig11_portability, fig12_roofline, load_harness,
-                        multi_topology, prefix_cache, quantized_cache,
-                        table1_throughput, table2_analytical)
+from repro.launch.mesh import ensure_host_devices
 
 
 def _fleet():
+    from benchmarks import multi_topology
     r = multi_topology.run(max_batch=4, max_len=64, n_per_model=5,
                            max_new=4, layers=1)
     yield "metric,fleet,two_engines"
@@ -34,6 +37,7 @@ def _fleet():
 
 
 def _serving():
+    from benchmarks import chunked_prefill
     r = chunked_prefill.run(arch="qwen1.5-0.5b", layers=1, max_batch=4,
                             max_len=64, chunk=16, budget=32, max_new=4,
                             require_speedup=None,
@@ -52,6 +56,7 @@ def _serving():
 
 
 def _qcache():
+    from benchmarks import quantized_cache
     r = quantized_cache.run(arch="qwen1.5-0.5b", layers=1, head_dim=64,
                             max_len=64, budget_blocks=24, block_size=8,
                             n_requests=36, max_batch=48, require_gain=1.8,
@@ -67,6 +72,7 @@ def _qcache():
 
 
 def _prefix():
+    from benchmarks import prefix_cache
     r = prefix_cache.run(arch="qwen1.5-0.5b", layers=1, max_len=128,
                          block_size=8, num_blocks=40, n_requests=15,
                          max_batch=24, require_ttft=2.0, require_peak=1.5,
@@ -83,6 +89,7 @@ def _prefix():
 
 
 def _harness():
+    from benchmarks import load_harness
     r = load_harness.run(arch="qwen1.5-0.5b", layers=1, n_requests=24,
                          burst_size=12, gap_steps=16, max_len=64, max_new=4,
                          naive_batch=8, slo_ttft_steps=12,
@@ -104,26 +111,76 @@ def _harness():
     yield f"bit_reproducible,=,{res['bit_reproducible']}"
 
 
+# the sharded section's mesh geometry; main() overwrites from --tp/--dp
+MESH = {"tp": 2, "dp": 2}
+
+
+def _sharded():
+    from benchmarks import sharded_serving
+    r = sharded_serving.run(arch="qwen1.5-0.5b", layers=1,
+                            tp=MESH["tp"], dp=MESH["dp"], num_blocks=12,
+                            block_size=8, max_batch=24, n_requests=16,
+                            burst_size=16, gap_steps=10, max_len=20,
+                            max_new=5, slo_ttft_steps=16,
+                            require_peak_gain=2.0,
+                            require_goodput_gain=1.3,
+                            out_json="BENCH_serving.json")
+    res = r["results"]
+    yield "metric,single_device,sharded"
+    yield (f"peak_concurrency,"
+           f"{res['metrics']['single']['peak_concurrency']},"
+           f"{res['metrics']['sharded']['peak_concurrency']}")
+    yield (f"goodput_req_per_1k_steps,"
+           f"{res['metrics']['single']['goodput_req_per_1k_steps']:.1f},"
+           f"{res['metrics']['sharded']['goodput_req_per_1k_steps']:.1f}")
+    yield (f"pool_tokens,{res['capacity']['pool_tokens']['single']},"
+           f"{res['capacity']['pool_tokens']['sharded']}")
+    yield (f"per_device_cache_bytes,"
+           f"{res['capacity']['per_device_cache_bytes']},=")
+    yield f"peak_gain,1.00,{res['peak_gain']:.2f}"
+    yield f"goodput_gain,1.00,{res['goodput_gain']:.2f}"
+    yield f"identical_streams,=,{res['identical_streams']}"
+    yield f"bit_reproducible,=,{res['bit_reproducible']}"
+
+
+def _figure(module: str):
+    def fn():
+        import importlib
+        return importlib.import_module(f"benchmarks.{module}").run()
+    return fn
+
+
 SECTIONS = [
-    ("table1", table1_throughput.run),
-    ("table2", table2_analytical.run),
-    ("fig5", fig5_tilesize.run),
-    ("fig8", fig8_heads.run),
-    ("fig11", fig11_portability.run),
-    ("fig12", fig12_roofline.run),
+    ("table1", _figure("table1_throughput")),
+    ("table2", _figure("table2_analytical")),
+    ("fig5", _figure("fig5_tilesize")),
+    ("fig8", _figure("fig8_heads")),
+    ("fig11", _figure("fig11_portability")),
+    ("fig12", _figure("fig12_roofline")),
     ("fleet", _fleet),
     ("serving", _serving),
     ("qcache", _qcache),
     ("prefix", _prefix),
     ("harness", _harness),
+    ("sharded", _sharded),
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run just this section")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="host-platform device count to force before jax "
+                         "initializes (the sharded section needs tp*dp)")
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--dp", type=int, default=2)
+    args = ap.parse_args()
+    MESH["tp"], MESH["dp"] = args.tp, args.dp
+    ensure_host_devices(max(args.devices, args.tp * args.dp))
     failures = 0
     for name, fn in SECTIONS:
-        if only and name != only:
+        if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
         print(f"== {name} ==", flush=True)

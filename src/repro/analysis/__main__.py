@@ -111,6 +111,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="lint these paths instead of src/repro")
     args = ap.parse_args(argv)
 
+    # the mesh census points need a multi-device host platform; this
+    # must land in XLA_FLAGS before anything imports jax (all the jax
+    # imports below are function-local for exactly this reason)
+    from repro.launch.mesh import ensure_host_devices
+    ensure_host_devices(4)
+
     lint_paths = args.lint if args.lint else [str(SRC_ROOT / "repro")]
 
     if args.update_baseline:

@@ -53,6 +53,8 @@ class MatrixPoint:
     fleet: bool = False              # multi-topology (maxima) mode
     prefix_cache: bool = False       # MemorySpec.prefix_cache
     harness: bool = False            # drive via repro.harness.replay
+    tp: int = 1                      # MeshSpec.tp (GSPMD mesh width)
+    dp: int = 1                      # MeshSpec.dp (EngineCluster replicas)
 
 
 def support_matrix() -> tuple[MatrixPoint, ...]:
@@ -98,6 +100,14 @@ def support_matrix() -> tuple[MatrixPoint, ...]:
         # ride the same once-compiled programs as direct submission
         MatrixPoint("gqa-paged-harness-chunked", cache_layout="paged",
                     policy="chunked", harness=True),
+        # mesh points: the fused step lowered onto a (1, tp) GSPMD mesh
+        # must keep the one-compilation invariant (canonical shardings —
+        # a trailing-None PartitionSpec would recompile on call two),
+        # and every DP replica behind the cluster queue compiles once
+        MatrixPoint("gqa-paged-tp2-chunked", cache_layout="paged",
+                    policy="chunked", tp=2),
+        MatrixPoint("gqa-paged-dp2-chunked", cache_layout="paged",
+                    policy="chunked", dp=2),
     )
 
 
@@ -115,9 +125,10 @@ def build_engine(point: MatrixPoint):
     import jax
 
     from repro.configs import REGISTRY, reduced
-    from repro.core.spec import (ExecutionSpec, MemorySpec, RuntimeSpec,
-                                 SchedulerSpec, maxima_for)
+    from repro.core.spec import (ExecutionSpec, MemorySpec, MeshSpec,
+                                 RuntimeSpec, SchedulerSpec, maxima_for)
     from repro.models.model import Model
+    from repro.serving.cluster import EngineCluster
     from repro.serving.engine import ServingEngine
     from repro.serving.sampling import SamplingParams
 
@@ -137,9 +148,14 @@ def build_engine(point: MatrixPoint):
                           kv_dtype=point.kv_dtype,
                           max_batch=4, max_len=64, block_size=8,
                           prefix_cache=point.prefix_cache),
-        scheduler=SchedulerSpec(policy=point.policy))
-    eng = ServingEngine(spec, sampling=SamplingParams(),
-                        **({"max_models": 2} if maxima is not None else {}))
+        scheduler=SchedulerSpec(policy=point.policy),
+        mesh=MeshSpec(tp=point.tp, dp=point.dp))
+    if point.dp > 1:
+        eng = EngineCluster(spec)
+    else:
+        eng = ServingEngine(
+            spec, sampling=SamplingParams(),
+            **({"max_models": 2} if maxima is not None else {}))
     eng.load(Model(cfg).init(jax.random.PRNGKey(0)))
     if point.fleet:
         eng.add_model(Model(cfg_b).init(jax.random.PRNGKey(1)), cfg_b)
@@ -211,13 +227,22 @@ def run_point(point: MatrixPoint) -> dict[str, Any]:
     for p in prompts:
         eng.submit(p, max_new_tokens=3)
     done += eng.run_to_completion()
-    comp = eng.compilations
+    if point.dp > 1:
+        # every replica must hold the invariant on its own; the record
+        # keeps the worst replica so a single offender fails compare()
+        reps = eng.compilations
+        comp = {k: max(c[k] for c in reps)
+                for k in ("decode", "prefill", "prefill_buckets")}
+        probe = eng.replicas[0]
+    else:
+        comp = eng.compilations
+        probe = eng
     record = {
         "compilations": {"decode": comp["decode"],
                          "prefill": comp["prefill"],
                          "prefill_buckets": comp["prefill_buckets"]},
         "completed": len(done),
-        "fingerprint": fingerprint_decode(eng),
+        "fingerprint": fingerprint_decode(probe),
     }
     expected = len(prompts) + (1 if point.prefix_cache else 0)
     if comp["decode"] != 1:

@@ -6,10 +6,12 @@ compile-once contract — and which are host-side control.  A function is
 a jit region when any of:
 
 * it is decorated with ``jax.jit`` / ``functools.partial(jax.jit, ...)``
-  / ``strict_jit``,
+  / ``strict_jit`` / ``partial(shard_map, ...)``,
 * it is passed to ``jax.jit(...)`` / ``strict_jit(...)`` /
-  ``pl.pallas_call(...)`` anywhere in its module (the serving engine's
-  ``self._decode = strict_jit(self._decode_impl, ...)`` pattern),
+  ``pl.pallas_call(...)`` / ``shard_map(...)`` anywhere in its module
+  (the serving engine's ``self._decode = strict_jit(self._decode_impl,
+  ...)`` pattern; a ``shard_map`` body is traced exactly like a jit
+  body, so explicitly-scheduled collective code gets the same rules),
 * its ``def`` line (or the line above it / above its first decorator)
   carries a ``# jit-region`` marker — the registry for functions that
   are only ever *called from inside* another module's jitted step
@@ -116,7 +118,9 @@ def _call_name(node: ast.expr) -> str | None:
 
 
 def _is_jit_wrapper(func: ast.expr) -> bool:
-    return _call_name(func) in ("jit", "strict_jit")
+    # shard_map bodies are traced like jit bodies: same host-sync and
+    # traced-branch hazards, plus collectives scheduled by hand
+    return _call_name(func) in ("jit", "strict_jit", "shard_map")
 
 
 @dataclasses.dataclass
@@ -155,9 +159,11 @@ def _jitted_targets(tree: ast.Module) -> dict[str, _StaticInfo]:
         bound = 0
         if name in ("jit", "strict_jit") and node.args:
             target = node.args[0]
-        elif name == "pallas_call" and node.args:
+        elif name in ("pallas_call", "shard_map") and node.args:
             target = node.args[0]
             # pl.pallas_call(functools.partial(_kernel, s1, s2, ...), ...)
+            # and shard_map(partial(body, cfg, ...), mesh=..., ...): the
+            # partial-bound leading args are Python values at trace time
             if isinstance(target, ast.Call) and \
                     _call_name(target.func) == "partial" and target.args:
                 bound = len(target.args) - 1

@@ -505,8 +505,17 @@ def roofline(flops: float, bytes_hbm: float, bytes_collective: float,
 
 def analytical_step_seconds(cfg: "ArchConfig", shape: "ShapeSpec",
                             n_chips: int, spec: TPUSpec = V5E,
-                            dtype_bytes: int = 2) -> RooflineTerms:
-    """Closed-form roofline estimate (no compiler), paper-Table-2 style."""
+                            dtype_bytes: int = 2, *,
+                            tp: int = 1) -> RooflineTerms:
+    """Closed-form roofline estimate (no compiler), paper-Table-2 style.
+
+    ``tp`` sizes the tensor-parallel collective term explicitly: with
+    ``tp > 1`` every layer pays two all-reduces of the activation slab
+    (Megatron attention-out + FFN-out), each moving ``2(tp-1)/tp`` of
+    the payload per chip over the interconnect.  ``tp=1`` keeps the
+    historical order-of-magnitude placeholder, so single-device rankings
+    (pinned by the calibration test) are unchanged.
+    """
     f = step_flops(cfg, shape)["total"]
     if shape.kind == "train":
         f *= train_multiplier()
@@ -520,6 +529,9 @@ def analytical_step_seconds(cfg: "ArchConfig", shape: "ShapeSpec",
     if shape.kind == "train":
         bytes_hbm = 3 * wb + act * layers * 12
         coll = 2.0 * arch_param_count(cfg) * dtype_bytes  # grad all-reduce
+    elif tp > 1:
+        # serving TP: 2 ring all-reduces per layer over the activations
+        coll = layers * 2.0 * act * 2.0 * (tp - 1) / tp
     else:
         coll = 2.0 * act  # TP activation collectives (order-of-magnitude)
     return roofline(f, bytes_hbm, coll, n_chips, spec)

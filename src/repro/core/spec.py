@@ -297,13 +297,69 @@ class SchedulerSpec:
 
 
 @dataclass(frozen=True)
+class MeshSpec:
+    """How one runnable configuration maps onto devices.
+
+    The ADAPTOR resource-allocation axis at datacenter scale: ``tp``
+    devices cooperate on ONE fused step (QKV/FFN/vocab weights and the
+    KV pool's kv-head axis sharded over the ``"model"`` mesh axis,
+    block tables and ``SlotState`` replicated), and ``dp`` independent
+    engine replicas sit behind one admission queue
+    (``serving.cluster.EngineCluster``).  ``MeshSpec()`` is the exact
+    historical single-device engine — no mesh is built at all.
+
+    Per-leaf divisibility fallback applies throughout
+    (``distributed.sharding``): an arch whose kv-head count does not
+    divide ``tp`` still lowers, its cache simply replicates
+    (``kv_shards`` reports what actually happened).
+    """
+
+    tp: int = 1   # tensor-parallel degree of each replica's fused step
+    dp: int = 1   # data-parallel engine replicas behind one queue
+
+    def __post_init__(self) -> None:
+        if self.tp < 1 or self.dp < 1:
+            raise ValueError(
+                f"MeshSpec needs tp >= 1 and dp >= 1, got tp={self.tp} "
+                f"dp={self.dp}")
+
+    @property
+    def n_devices(self) -> int:
+        return self.tp * self.dp
+
+    def kv_shards(self, arch: ArchConfig) -> int:
+        """How many ways the cache's kv-head axis actually splits under
+        ``tp`` — the divisor behind the ~1/N per-device KV bytes claim.
+        MLA latents carry no kv-head axis and always replicate."""
+        if arch.mla is not None:
+            return 1
+        kv = arch.num_kv_heads or arch.num_heads
+        return self.tp if kv % self.tp == 0 else 1
+
+
+@dataclass(frozen=True)
+class MeshCapacity:
+    """The mesh-aware capacity plan (``RuntimeSpec.capacity()``): what
+    admission can actually hold, per device and across the replica set.
+    Asserted against real admission behaviour by the mesh tests."""
+
+    n_devices: int           # tp * dp
+    max_concurrent: int      # dp * max_batch admission ceiling
+    pool_tokens: int         # total KV tokens across all replicas
+    kv_shards: int           # ways the kv-head axis splits (1 = replicated)
+    cache_bytes_per_replica: int   # one replica's pool, summed over its tp
+    per_device_cache_bytes: int    # ~cache_bytes_per_replica / kv_shards
+
+
+@dataclass(frozen=True)
 class RuntimeSpec:
     """One frozen description of a runnable configuration.
 
     ``arch`` is *what* runs, ``maxima`` is the fabric it must fit (None =
     a dedicated fabric exactly ``arch``-sized), ``execution`` is how it
-    computes, ``memory`` is how its decode state is laid out, and
-    ``scheduler`` is how the serving engine feeds it.
+    computes, ``memory`` is how its decode state is laid out,
+    ``scheduler`` is how the serving engine feeds it, and ``mesh`` is
+    how many devices cooperate on (tp) and replicate (dp) the result.
     """
 
     arch: ArchConfig
@@ -311,6 +367,7 @@ class RuntimeSpec:
     execution: ExecutionSpec = field(default_factory=ExecutionSpec)
     memory: MemorySpec = field(default_factory=MemorySpec)
     scheduler: SchedulerSpec = field(default_factory=SchedulerSpec)
+    mesh: MeshSpec = field(default_factory=MeshSpec)
 
     def __post_init__(self) -> None:
         self.validate()
@@ -353,6 +410,31 @@ class RuntimeSpec:
                 raise ValueError(
                     "scheduler policy 'chunked' is not satisfiable: "
                     + "; ".join(bad))
+        if self.mesh.tp > 1:
+            if self.maxima is not None:
+                raise ValueError(
+                    "mesh.tp > 1 is not supported in multi-topology (fleet) "
+                    "mode: the fabric's per-slot weight-table gathers are "
+                    "not sharded over the model axis; run fleet members as "
+                    "data-parallel replicas instead (MeshSpec(dp=...))")
+            if self.execution.matmul_backend != "xla" or \
+                    self.execution.paged_attn_impl != "gather":
+                raise ValueError(
+                    "mesh.tp > 1 requires the XLA compute path "
+                    "(matmul_backend='xla', paged_attn_impl='gather'): the "
+                    "Pallas kernels are single-device programs GSPMD cannot "
+                    "partition")
+            if self.scheduler.policy == "bucketed":
+                raise ValueError(
+                    "mesh.tp > 1 requires the chunked scheduler: the "
+                    "bucketed path stages B=1 prefill caches on the default "
+                    "device, which cannot mix with a mesh-sharded pool; use "
+                    "policy='auto' or 'chunked'")
+            if cfg.family not in CHUNKABLE_FAMILIES:
+                raise ValueError(
+                    f"mesh.tp > 1 is unsupported for family {cfg.family!r}: "
+                    "tensor parallelism requires the fused chunked step "
+                    f"(families {CHUNKABLE_FAMILIES})")
         if self.maxima is not None:
             bad = self.violations(self.maxima)
             if bad:
@@ -392,9 +474,22 @@ class RuntimeSpec:
     # ------------------------------------------------------------------
     # The re-synthesis boundary
     # ------------------------------------------------------------------
-    def violations(self, maxima: Maxima) -> list[str]:
-        """Every way this spec exceeds ``maxima`` (empty = fits)."""
+    def violations(self, maxima: Maxima,
+                   mesh: MeshSpec | None = None) -> list[str]:
+        """Every way this spec exceeds ``maxima`` (empty = fits).
+
+        Mesh-aware: under tensor parallelism each device only has to
+        hold its *shard*, so the TP-shardable dimensions (heads, hidden,
+        out/vocab) are checked post-division — exactly the dims
+        ``param_rules`` puts on the ``model`` axis, with the same
+        divisibility fallback (an indivisible dim replicates and is
+        checked whole).  ``mesh=None`` uses the spec's own mesh, so the
+        historical single-device call sites are unchanged."""
+        mesh = self.mesh if mesh is None else mesh
         regs = self.static_registers()
+        for k in ("heads", "hidden", "out"):
+            if mesh.tp > 1 and regs[k] % mesh.tp == 0:
+                regs[k] //= mesh.tp
         lim = {"sequence": maxima.seq_max, "heads": maxima.heads_max,
                "layers_enc": maxima.layers_enc_max,
                "layers_dec": maxima.layers_dec_max,
@@ -404,14 +499,45 @@ class RuntimeSpec:
         if self.arch.resolved_head_dim > maxima.head_dim_max:
             out.append(f"head_dim={self.arch.resolved_head_dim} > "
                        f"{maxima.head_dim_max}")
-        if self.arch.vocab_size > maxima.vocab:
-            out.append(f"vocab={self.arch.vocab_size} > {maxima.vocab}")
+        vocab = self.arch.vocab_size
+        if mesh.tp > 1 and vocab % mesh.tp == 0:
+            vocab //= mesh.tp
+        if vocab > maxima.vocab:
+            out.append(f"vocab={vocab} > {maxima.vocab}")
         return out
 
-    def fits_within(self, maxima: Maxima) -> bool:
+    def fits_within(self, maxima: Maxima,
+                    mesh: MeshSpec | None = None) -> bool:
         """True iff every live dimension fits the synthesized fabric —
-        exact equality is a fit (the maxima topology itself runs)."""
-        return not self.violations(maxima)
+        exact equality is a fit (the maxima topology itself runs).
+        Under a TP mesh the per-device *shard* is what must fit."""
+        return not self.violations(maxima, mesh)
+
+    # ------------------------------------------------------------------
+    # Mesh-aware capacity planning
+    # ------------------------------------------------------------------
+    def capacity(self, mesh: MeshSpec | None = None) -> MeshCapacity:
+        """What admission can hold on this spec's mesh: the budget
+        scales ~N under DP (dp independent pools and slot sets) and the
+        per-device KV bytes scale ~1/N under TP (the pool's kv-head
+        axis splits ``kv_shards`` ways).  Asserted against real
+        admission/sharding behaviour by the mesh tests."""
+        from repro.core.analytical import kv_bytes_per_token
+        mesh = self.mesh if mesh is None else mesh
+        mem = self.memory
+        per_replica_tokens = (
+            mem.resolved_num_blocks * mem.block_size
+            if mem.cache_layout == "paged" else mem.max_batch * mem.max_len)
+        per_tok = kv_bytes_per_token(self.arch, kv_dtype=mem.kv_dtype)
+        replica_bytes = int(per_replica_tokens * per_tok)
+        shards = mesh.kv_shards(self.arch)
+        return MeshCapacity(
+            n_devices=mesh.n_devices,
+            max_concurrent=mesh.dp * mem.max_batch,
+            pool_tokens=mesh.dp * per_replica_tokens,
+            kv_shards=shards,
+            cache_bytes_per_replica=replica_bytes,
+            per_device_cache_bytes=replica_bytes // shards)
 
     # ------------------------------------------------------------------
     # Analytical autotuning (the paper's resource allocator)
@@ -433,23 +559,36 @@ class RuntimeSpec:
 # Fleet maxima
 # ---------------------------------------------------------------------------
 def maxima_for(*archs: ArchConfig, seq_max: int,
-               layers_dec_max: int | None = None) -> Maxima:
+               layers_dec_max: int | None = None,
+               mesh: MeshSpec | None = None) -> Maxima:
     """The smallest fabric covering every arch — elementwise maxima, the
-    'synthesis planning' step of multi-topology serving."""
+    'synthesis planning' step of multi-topology serving.
+
+    Mesh-aware: with ``mesh.tp > 1`` the planned fabric is the
+    *per-device* one — each arch contributes its TP shard of the
+    shardable dims (heads, d_ff, vocab/out; same divisibility fallback
+    as ``distributed.sharding.param_rules``), so the returned maxima are
+    ~1/tp smaller on those axes.  ``RuntimeSpec.fits_within(maxima,
+    mesh)`` is the matching check."""
     if not archs:
         raise ValueError("maxima_for needs at least one ArchConfig")
+    tp = mesh.tp if mesh is not None else 1
+
+    def shard(dim: int) -> int:
+        return dim // tp if tp > 1 and dim % tp == 0 else dim
+
     enc = [a.encdec.num_encoder_layers if a.encdec else a.num_layers
            for a in archs]
     dec = [a.num_layers if a.encdec else 0 for a in archs]
     return Maxima(
         seq_max=seq_max,
-        heads_max=max(a.num_heads for a in archs),
+        heads_max=max(shard(a.num_heads) for a in archs),
         layers_enc_max=max(enc),
         layers_dec_max=(layers_dec_max if layers_dec_max is not None
                         else max(dec)),
         d_model_max=max(a.d_model for a in archs),
-        d_ff_max=max(a.d_ff for a in archs),
-        out_max=max(a.vocab_size for a in archs),
+        d_ff_max=max(shard(a.d_ff) for a in archs),
+        out_max=max(shard(a.vocab_size) for a in archs),
         head_dim_max=max(a.resolved_head_dim for a in archs),
-        vocab=max(a.vocab_size for a in archs),
+        vocab=max(shard(a.vocab_size) for a in archs),
     )

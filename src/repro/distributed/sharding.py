@@ -116,6 +116,66 @@ def tree_param_shardings(mesh: Mesh, axes_tree, abstract_tree,
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def tp_mesh(devices) -> Mesh:
+    """A ``(data=1, model=len(devices))`` mesh over an explicit device
+    list — one serving replica's tensor-parallel group.  The replica
+    set's data parallelism lives on the host (``serving.cluster``), so
+    the data axis is always 1 here; a single device yields a 1x1 mesh
+    that pins every array to that device (how DP replicas get disjoint
+    placements without a second code path)."""
+    devs = list(devices)
+    if not devs:
+        raise ValueError("tp_mesh needs at least one device")
+    return Mesh(np.asarray(devs).reshape(1, len(devs)), ("data", "model"))
+
+
+def kv_cache_shardings(mesh: Mesh, cache, strategy: ShardingStrategy):
+    """Shardings for a decode-cache pytree, mirroring ``param_rules``'
+    kv_heads rule with the same per-leaf divisibility fallback.
+
+    KV caches are recognized structurally (a NamedTuple whose first two
+    fields are ``k``/``v`` — ``models.attention.KVCache`` and the
+    fabric's synthesis-time cache; importing them here would cycle):
+    value leaves ``[L, rows, cols, n_kv, hd]`` shard the kv-head axis
+    (-2) over the TP axis, int8 scale rows (``values.shape[:-1]``)
+    shard their trailing kv-head axis, and everything else — MLA
+    latents (no kv-head axis), recurrent state, hybrid per-layer
+    entries that aren't attention — replicates.  A kv-head count that
+    does not divide the TP extent replicates that leaf, so every arch
+    lowers on every mesh."""
+    tp = strategy.tp_axis
+    tp_n = mesh.shape.get(tp, 1) if tp is not None else 1
+    rep = NamedSharding(mesh, P())
+
+    def axis_spec(leaf, axis: int) -> NamedSharding:
+        if tp_n > 1 and leaf.ndim > axis % leaf.ndim \
+                and leaf.shape[axis] % tp_n == 0:
+            # no trailing Nones: GSPMD canonicalizes specs that way, and a
+            # non-canonical device_put sharding would miss the jit cache on
+            # the call after the first (sharding is part of the C++ key)
+            spec = [None] * (axis % leaf.ndim) + [tp]
+            return NamedSharding(mesh, P(*spec))
+        return rep
+
+    def walk(node):
+        if node is None:
+            return None
+        fields = getattr(node, "_fields", None)
+        if fields is not None and fields[:2] == ("k", "v"):
+            return type(node)(
+                axis_spec(node.k, -2), axis_spec(node.v, -2),
+                *(None if s is None else axis_spec(s, -1)
+                  for s in node[2:]))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and fields is None:
+            return type(node)(walk(v) for v in node)
+        # any other node (MLACache, stacked recurrent state, bare array)
+        return jax.tree.map(lambda _: rep, node)
+
+    return walk(cache)
+
+
 def batch_sharding(mesh: Mesh, strategy: ShardingStrategy,
                    ndim: int = 2) -> NamedSharding:
     """Tokens/targets [B, S, ...]: batch over the dp axes."""

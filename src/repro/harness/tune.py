@@ -25,6 +25,7 @@ Front doors::
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -32,7 +33,7 @@ from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.analytical import (V5E, TPUSpec, analytical_step_seconds,
                                    kv_bytes_per_token, weight_bytes)
 from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
-                             RuntimeSpec, SchedulerSpec)
+                             MeshSpec, RuntimeSpec, SchedulerSpec)
 
 # Enumerated knob grids.  Small on purpose: the analytical model makes
 # each point ~free, but the benchmark that *verifies* the winner is not.
@@ -47,18 +48,41 @@ class DeviceProfile:
     """The target platform, plus how much of its HBM the KV cache may
     use.  ``cache_budget_bytes`` pins the budget directly (the
     equal-memory comparisons in benchmarks do this); ``None`` derives it
-    as ``cache_fraction`` of HBM left after weights."""
+    as ``cache_fraction`` of HBM left after weights.
+
+    ``n_devices`` is the mesh surface: the tuner enumerates every
+    ``(tp, dp)`` divisor pair of it as a candidate axis (``n_chips``
+    keeps its historical single-replica meaning and pins the 1-device
+    ranking).  ``interconnect_gbps`` overrides the chip's ICI bandwidth
+    for the TP all-reduce term — the knob that makes a host-mesh dev box
+    (slow interconnect) rank TP lower than a real pod would."""
 
     tpu: TPUSpec = V5E
     n_chips: int = 1
     cache_fraction: float = 0.4
     cache_budget_bytes: int | None = None
+    n_devices: int = 1
+    interconnect_gbps: float | None = None
+
+    @property
+    def effective_tpu(self) -> TPUSpec:
+        if self.interconnect_gbps is None:
+            return self.tpu
+        return dataclasses.replace(self.tpu,
+                                   ici_bw=self.interconnect_gbps * 1e9)
+
+    def meshes(self) -> tuple[MeshSpec, ...]:
+        """Every (tp, dp) divisor pair of ``n_devices``, tp ascending —
+        (1, 1) only for the historical single-device profile."""
+        return tuple(MeshSpec(tp=tp, dp=self.n_devices // tp)
+                     for tp in range(1, self.n_devices + 1)
+                     if self.n_devices % tp == 0)
 
     def budget(self, arch: ArchConfig, dtype_bytes: int = 2) -> int:
         if self.cache_budget_bytes is not None:
             return self.cache_budget_bytes
-        free = self.n_chips * self.tpu.hbm_bytes - weight_bytes(
-            arch, dtype_bytes)
+        free = max(self.n_chips, self.n_devices) * self.tpu.hbm_bytes \
+            - weight_bytes(arch, dtype_bytes)
         return max(int(self.cache_fraction * free), 0)
 
 
@@ -111,7 +135,8 @@ class Candidate:
 
     def summary(self) -> dict:
         m, s = self.spec.memory, self.spec.scheduler
-        return {"cache_layout": m.cache_layout, "max_batch": m.max_batch,
+        return {"tp": self.spec.mesh.tp, "dp": self.spec.mesh.dp,
+                "cache_layout": m.cache_layout, "max_batch": m.max_batch,
                 "block_size": m.block_size if m.cache_layout == "paged" else None,
                 "num_blocks": m.resolved_num_blocks if m.cache_layout == "paged" else None,
                 "kv_dtype": m.kv_dtype, "prefix_cache": m.prefix_cache,
@@ -164,21 +189,25 @@ def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
     prompts in fewer steps but each step costs more; prefix caching
     shrinks the prompt work) — which is all a *ranking* objective needs.
     """
-    tpu, chips = device.tpu, device.n_chips
+    tpu = device.effective_tpu
+    tp = cand.mesh.tp
+    # one TP replica spans tp chips; the legacy n_chips profile knob
+    # keeps meaning "chips per replica" for 1-device rankings
+    chips = tp if tp > 1 else device.n_chips
     B = cand.memory.max_batch
     eff_prompt = workload.effective_prompt_len if cand.memory.prefix_cache \
         else workload.mean_prompt_len
     kv_depth = int(eff_prompt + workload.mean_new_tokens)
     t_decode = analytical_step_seconds(
         arch, ShapeSpec("tune_decode", kv_depth, B, "decode"),
-        chips, tpu, dtype_bytes).t_total
+        chips, tpu, dtype_bytes, tp=tp).t_total
     concurrent = max(1, min(B, workload.burst_size))
     if cand.scheduler.policy == "chunked":
         grant = min(cand.scheduler.resolved_token_budget,
                     max(int(eff_prompt), cand.scheduler.chunk_size))
         t_pre = analytical_step_seconds(
             arch, ShapeSpec("tune_chunk", grant, 1, "prefill"),
-            chips, tpu, dtype_bytes).t_total
+            chips, tpu, dtype_bytes, tp=tp).t_total
         t_mixed = t_decode + t_pre
         share = cand.scheduler.resolved_token_budget / concurrent
         ttft_steps = eff_prompt / max(share, 1.0)
@@ -193,7 +222,7 @@ def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
         # behind it, and a burst larger than the batch waits whole turns
         t_pre = analytical_step_seconds(
             arch, ShapeSpec("tune_prefill", max(int(eff_prompt), 1), 1,
-                            "prefill"), chips, tpu, dtype_bytes).t_total
+                            "prefill"), chips, tpu, dtype_bytes, tp=tp).t_total
         waves = math.ceil(concurrent / B)
         ttft = waves * t_pre
         itl = t_decode + concurrent * t_pre / max(
@@ -205,7 +234,7 @@ def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
 def _candidates(arch: ArchConfig, device: DeviceProfile,
                 workload: WorkloadProfile, max_len: int, budget: int,
                 execution: ExecutionSpec, kv_dtypes: tuple[str, ...],
-                maxima) -> list[RuntimeSpec]:
+                maxima, mesh: MeshSpec = MeshSpec()) -> list[RuntimeSpec]:
     chunkable = arch.family in CHUNKABLE_FAMILIES
     pageable = arch.family in ("dense", "vlm", "moe")
     live_tokens = workload.effective_prompt_len + workload.mean_new_tokens
@@ -215,7 +244,7 @@ def _candidates(arch: ArchConfig, device: DeviceProfile,
         try:
             out.append(RuntimeSpec(arch=arch, maxima=maxima,
                                    execution=execution, memory=memory,
-                                   scheduler=scheduler))
+                                   scheduler=scheduler, mesh=mesh))
         except ValueError:
             pass    # geometry the spec itself rejects is not a candidate
 
@@ -296,8 +325,13 @@ def tune(arch: ArchConfig, device: DeviceProfile | None = None,
     kv_dtypes = ("compute", "int8") if (
         allow_int8_kv and arch.family in ("dense", "vlm", "moe")) \
         else ("compute",)
-    cands = _candidates(arch, device, workload, max_len, budget,
-                        execution, kv_dtypes, maxima)
+    cands: list[RuntimeSpec] = []
+    for mesh in device.meshes():
+        # the whole-fleet budget splits evenly across DP replicas; each
+        # candidate's geometry is *per replica* (what one engine sees)
+        cands += _candidates(arch, device, workload, max_len,
+                             budget // mesh.dp, execution, kv_dtypes,
+                             maxima, mesh=mesh)
     if not cands:
         raise ValueError(
             f"no feasible configuration for {arch.family!r} arch under a "
@@ -307,11 +341,13 @@ def tune(arch: ArchConfig, device: DeviceProfile | None = None,
     for spec in cands:
         ttft, itl, latency = _predict(arch, spec, device, workload,
                                       dtype_bytes)
+        # dp replicas drain dp queues at once: fleet throughput scales,
+        # per-request latency does not
         scored.append(Candidate(
-            spec=spec, score=spec.memory.max_batch / latency,
+            spec=spec, score=spec.mesh.dp * spec.memory.max_batch / latency,
             predicted_latency_s=latency, predicted_ttft_s=ttft,
-            predicted_itl_s=itl, cache_bytes=cache_bytes(spec),
-            max_batch=spec.memory.max_batch))
+            predicted_itl_s=itl, cache_bytes=spec.mesh.dp * cache_bytes(spec),
+            max_batch=spec.mesh.dp * spec.memory.max_batch))
     # deterministic ranking: score desc, then the smaller provisioned
     # pool wins ties, then the summary repr as a total order
     scored.sort(key=lambda c: (-c.score, c.cache_bytes, repr(c.summary())))

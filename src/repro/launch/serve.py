@@ -22,18 +22,22 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-
-from repro.configs import REGISTRY, reduced
-from repro.core.spec import ExecutionSpec, MemorySpec, RuntimeSpec, maxima_for
-from repro.models.model import Model
-from repro.serving.engine import ServingEngine
-from repro.serving.sampling import SamplingParams
+from repro.launch.mesh import ensure_host_devices
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force this many host-platform devices (must be "
+                         "set before jax initializes — which is why every "
+                         "heavy import in this driver is deferred)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: the fused step's weights "
+                         "and KV pool shard over a (1, tp) GSPMD mesh")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas behind one admission "
+                         "queue (serving.cluster.EngineCluster)")
     ap.add_argument("--fleet", default=None,
                     help="comma-separated arch ids served multi-topology "
                          "from one compiled step (overrides --arch)")
@@ -83,6 +87,26 @@ def main() -> None:
     args = ap.parse_args()
     if args.tuned and args.fleet:
         ap.error("--tuned tunes a single architecture; drop --fleet")
+    if args.dp > 1 and args.fleet:
+        ap.error("--dp replicates one architecture; drop --fleet")
+    need = args.tp * args.dp
+    if args.devices is not None:
+        ensure_host_devices(max(args.devices, need))
+    elif need > 1:
+        ensure_host_devices(need)
+
+    # everything below may initialize jax — after the device bootstrap
+    import dataclasses
+
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.core.spec import (ExecutionSpec, MemorySpec, MeshSpec,
+                                 RuntimeSpec, maxima_for)
+    from repro.models.model import Model
+    from repro.serving.cluster import EngineCluster
+    from repro.serving.engine import ServingEngine
+    from repro.serving.sampling import SamplingParams
 
     names = (args.fleet.split(",") if args.fleet else [args.arch])
     cfgs = [reduced(REGISTRY[n]) for n in names]
@@ -125,9 +149,15 @@ def main() -> None:
                               num_blocks=args.num_blocks,
                               kv_dtype=args.kv_dtype,
                               prefix_cache=args.prefix_cache))
-    eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
-                        sampling=SamplingParams(temperature=args.temperature,
-                                                top_k=40))
+    if args.tp > 1 or args.dp > 1:
+        spec = dataclasses.replace(
+            spec, mesh=MeshSpec(tp=args.tp, dp=args.dp))
+    sampling = SamplingParams(temperature=args.temperature, top_k=40)
+    if args.dp > 1:
+        eng = EngineCluster(spec)
+    else:
+        eng = ServingEngine(spec, max_models=max(len(cfgs), 1),
+                            sampling=sampling)
     if args.fleet:
         model_ids = [eng.add_model(Model(c).init(jax.random.PRNGKey(i)), c)
                      for i, c in enumerate(cfgs)]
@@ -162,11 +192,15 @@ def main() -> None:
             rng, k = jax.random.split(rng)
             plen = int(jax.random.randint(k, (), 4, args.max_len // 2))
             prompt = list(range(1, plen + 1))
+            # the cluster has no engine-level default sampling — pass it
+            # per submit (a no-op on the single-engine path)
             eng.submit(prompt, max_new_tokens=args.max_new,
+                       sampling=sampling,
                        model=model_ids[i % len(model_ids)])
 
         t0 = time.time()
-        done = eng.run_to_completion(sync_every=args.sync_every)
+        done = (eng.run_to_completion() if args.dp > 1
+                else eng.run_to_completion(sync_every=args.sync_every))
         dt = time.time() - t0
         total_new = sum(len(r.generated) for r in done)
         print(f"{len(done)} requests, {total_new} tokens in {dt:.1f}s "
@@ -174,6 +208,21 @@ def main() -> None:
     if args.fleet:
         print(f"fleet: {names} served by ONE fused step "
               f"(decode compilations = {eng.compilations['decode']})")
+    if args.tp > 1 or args.dp > 1:
+        cap = spec.capacity()
+        print(f"mesh: tp={args.tp} x dp={args.dp} on {cap.n_devices} "
+              f"devices — KV pool {cap.kv_shards}-way sharded, "
+              f"{cap.per_device_cache_bytes / 2**20:.2f} MiB cache/device, "
+              f"up to {cap.max_concurrent} concurrent")
+    if args.dp > 1:
+        print("compile accounting per replica:", eng.compilations)
+        gets = sum(s["device_gets"] for s in eng.replica_stats())
+        print(f"host traffic: {gets} bulk device_gets over "
+              f"{eng.stats['decode_steps']} cluster rounds")
+        for r in done[:3]:
+            print(f"  req {r.uid} (model {r.model}): "
+                  f"prompt[:6]={r.prompt[:6]} -> {r.generated[:10]}...")
+        return
     print("compile accounting:", eng.compilations)
     if spec.memory.kv_dtype == "int8":
         hd = cfgs[0].resolved_head_dim

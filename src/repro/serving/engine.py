@@ -67,6 +67,7 @@ chunked, fleet.  See README "Fully-quantized serving".
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
 from typing import Any, NamedTuple
@@ -75,6 +76,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
 from repro.core.paging import (NULL_BLOCK, BlockAllocator, FragmentationStats,
                                PrefixCache, blocks_for_tokens)
 from repro.core.jitutil import strict_jit
@@ -223,6 +225,7 @@ class ServingEngine:
                  maxima=None, max_models: int = 4,
                  sampling: SamplingParams = SamplingParams(),
                  rng: jax.Array | None = None,
+                 devices=None,
                  max_batch: int | None = None,
                  max_len: int | None = None,
                  matmul_backend: str | None = None,
@@ -259,6 +262,52 @@ class ServingEngine:
             self.scheduler = sched.policy
         self.chunk_size = min(sched.chunk_size, self.max_len)
         self.token_budget = sched.resolved_token_budget
+
+        # ---- tensor-parallel mesh (spec.mesh.tp devices per fused step) --
+        # MeshSpec(tp=1) without an explicit device list is the historical
+        # single-device engine: no mesh object, identical lowering.  With
+        # tp > 1 (or an explicit ``devices=`` placement, how EngineCluster
+        # pins each DP replica to its own device slice) the engine builds a
+        # (data=1, model=tp) mesh: params shard via the logical-axis rules,
+        # the cache's kv-head axis shards via ``kv_cache_shardings``, and
+        # SlotState / block tables replicate.  spec.validate() already
+        # rejected tp > 1 with fleet mode / Pallas kernels / bucketed.
+        tp = spec.mesh.tp
+        if spec.mesh.dp > 1 and devices is None:
+            raise ValueError(
+                f"spec.mesh.dp={spec.mesh.dp}: data parallelism is replica-"
+                "level — construct serving.cluster.EngineCluster(spec) (one "
+                "ServingEngine is a single replica; EngineCluster passes "
+                "each replica its device slice via devices=)")
+        self._mesh = self._strategy = self._cache_shardings = None
+        self._device = None
+        if tp > 1 or devices is not None:
+            if tp > 1 and self.scheduler != "chunked":
+                raise ValueError(
+                    "mesh.tp > 1 requires the chunked scheduler, but policy "
+                    "'auto' resolved to 'bucketed' for this spec (the "
+                    "bucketed path stages B=1 prefill caches off-mesh); fix "
+                    "the chunk geometry so chunked is satisfiable")
+            devs = list(devices) if devices is not None \
+                else jax.devices()[:tp]
+            if len(devs) < tp:
+                raise ValueError(
+                    f"mesh.tp={tp} needs {tp} devices but only {len(devs)} "
+                    "are visible; on CPU force virtual host devices before "
+                    "jax initializes (launch.mesh.ensure_host_devices(n) / "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=n)")
+            if tp > 1:
+                self._mesh = shd.tp_mesh(devs[:tp])
+                self._strategy = shd.strategy_for_mesh(self._mesh)
+            else:
+                # tp=1 replica pinned to one device: no GSPMD at all.  A
+                # 1x1 mesh would work but poisons the jit cache — device_put
+                # commits NamedShardings while the step's outputs come back
+                # SingleDeviceSharding, and the sharding mismatch recompiles
+                # the step on its second call (sharding is part of the C++
+                # jit cache key).  Committed single-device placement gives
+                # one stable key and disjoint replica residency for free.
+                self._device = devs[0]
 
         # ---- compute path: one fixed model, or the register fabric -------
         if spec.maxima is not None:
@@ -360,8 +409,17 @@ class ServingEngine:
             self.params = self.fabric.init_table()
             self.cache = self.fabric.init_cache(max_batch, max_len,
                                                 paging=self.paging)
+            if self._placement is not None:
+                # DP replica placement: the fabric's table and cache live
+                # whole on this replica's device (slice); add_model's
+                # scatters and the fused step keep that placement because
+                # every other operand follows the committed arrays
+                self.params = jax.device_put(self.params, self._placement)
+                self.cache = jax.device_put(self.cache, self._placement)
         self.state: SlotState = self._init_state(
             rng if rng is not None else jax.random.PRNGKey(0))
+        if self._placement is not None:
+            self.state = jax.device_put(self.state, self._placement)
         self.slot_req: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self._uid = 0
@@ -446,6 +504,71 @@ class ServingEngine:
         self.params = params
         self.cache = self.model.init_cache(self.max_batch, self.max_len,
                                            paging=self.paging)
+        if self._mesh is not None or self._device is not None:
+            self._shard_arrays()
+
+    @property
+    def _placement(self):
+        """device_put target for whole (replicated) arrays: the mesh's
+        replicated sharding, the pinned replica device, or None for the
+        historical uncommitted single-device engine."""
+        if self._mesh is not None:
+            return shd.replicated(self._mesh)
+        return self._device
+
+    def _shard_arrays(self) -> None:
+        """Lower ``spec.mesh`` through ``distributed.sharding``: params
+        via the logical-axis rules the models already annotate
+        (``model.axes()``), the cache via its kv-head axis, block tables
+        replicated.  Committed placements matter beyond locality — the
+        donated fused step must see inputs already laid out like its
+        outputs, or strict_jit's donation contract trips."""
+        if self._mesh is None:
+            self.params = jax.device_put(self.params, self._device)
+            self.cache = jax.device_put(self.cache, self._device)
+            if self.block_tables is not None:
+                self.block_tables = jax.device_put(self.block_tables,
+                                                   self._device)
+            return
+        mesh, strategy = self._mesh, self._strategy
+        axes, abstract = self.model.axes(), self.model.abstract()
+        if self.spec.execution.quant == "int8":
+            from repro.core.serve_quant import (quantize_abstract,
+                                                quantize_axes)
+            ms = self.spec.execution.quant_min_size
+            axes = quantize_axes(axes, abstract, min_size=ms)
+            abstract = quantize_abstract(abstract, min_size=ms)
+        self.params = jax.device_put(
+            self.params,
+            shd.tree_param_shardings(mesh, axes, abstract, strategy))
+        self._cache_shardings = shd.kv_cache_shardings(mesh, self.cache,
+                                                       strategy)
+        self.cache = jax.device_put(self.cache, self._cache_shardings)
+        if self.block_tables is not None:
+            self.block_tables = jax.device_put(self.block_tables,
+                                               shd.replicated(mesh))
+
+    def _pin_outputs(self, cache, state: SlotState):
+        """In-graph output shardings for the donated (cache, state) pair:
+        identical to the input shardings, so XLA's buffer donation holds
+        under GSPMD.  No-op off-mesh (the jaxpr of the single-device
+        engine is unchanged — the census fingerprints pin that)."""
+        if self._mesh is None:
+            return cache, state
+        wsc = jax.lax.with_sharding_constraint
+        if self._cache_shardings is not None:
+            cache = jax.tree.map(wsc, cache, self._cache_shardings)
+        rep = shd.replicated(self._mesh)
+        state = jax.tree.map(lambda x: wsc(x, rep), state)
+        return cache, state
+
+    def _mesh_scope(self):
+        """Activation-constraint scope for traced bodies: inside it the
+        models' ``constrain(...)`` hints resolve against this engine's
+        mesh (no-ops off-mesh)."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return shd.active(self._mesh, self._strategy)
 
     def add_model(self, params, arch: ArchConfig | None = None) -> int:
         """Pack one fleet member's weights into the fabric's model table
@@ -511,6 +634,15 @@ class ServingEngine:
         elif model != 0:
             raise ValueError("submit(model=...) requires multi-topology "
                              "mode (ServingEngine(spec, maxima=...))")
+        else:
+            vocab = self.cfg.vocab_size
+            if not all(0 <= t < vocab for t in prompt):
+                # out-of-range ids are not just garbage-in: XLA clamps the
+                # OOB embedding gather, and a *sharded* table clamps to a
+                # different row than an unsharded one — the same submit
+                # would stream different tokens on different meshes
+                raise ValueError(
+                    f"prompt contains token ids outside vocab [0, {vocab})")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new_tokens,
                                   eos_id, sampling, model=model))
@@ -624,8 +756,13 @@ class ServingEngine:
 
     def _cow_impl(self, cache, src, dst):
         """Fork pool block ``src`` into ``dst`` across every cache leaf
-        (values and int8 scale rows alike — ``kv_quant.fork_block``)."""
-        return fork_block(cache, src, dst)
+        (values and int8 scale rows alike — ``kv_quant.fork_block``).
+        Donated, so the pool's mesh sharding is re-pinned on the way out."""
+        cache = fork_block(cache, src, dst)
+        if self._mesh is not None and self._cache_shardings is not None:
+            cache = jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                 self._cache_shardings)
+        return cache
 
     def _evict_slot_impl(self, state: SlotState, slot) -> SlotState:
         """Preemption: park a slot as idle (its tokens were banked on the
@@ -642,7 +779,7 @@ class ServingEngine:
         """The fused device step: decode -> sample -> scatter token ->
         advance indices/budgets -> raise done flags.  One dispatch, zero
         host syncs."""
-        with backend.use(self.matmul_backend):
+        with backend.use(self.matmul_backend), self._mesh_scope():
             rng, k = jax.random.split(state.rng)
             if self.fabric is not None:
                 logits, cache = self.fabric.decode_step(
@@ -678,7 +815,7 @@ class ServingEngine:
                 count=count,
                 buf=buf,
                 rng=rng)
-            return cache, state
+            return self._pin_outputs(cache, state)
 
     def _mixed_impl(self, params, cache, state: SlotState, block_tables,
                     chunk_len):
@@ -689,7 +826,7 @@ class ServingEngine:
         nothing for idle ones — then samples, scatters tokens and
         advances indices/budgets/eos flags.  Zero host syncs; chunk
         grants are data, so this traces exactly once."""
-        with backend.use(self.matmul_backend):
+        with backend.use(self.matmul_backend), self._mesh_scope():
             B, W = self.max_batch, self.chunk_size
             rng, k = jax.random.split(state.rng)
             prefilling = chunk_len > 0
@@ -746,7 +883,7 @@ class ServingEngine:
                 buf=buf,
                 rng=rng,
                 pf_pos=pf_pos)
-            return cache, state
+            return self._pin_outputs(cache, state)
 
     # ------------------------------------------------------------------
     # host-side control (dispatch-only between syncs)

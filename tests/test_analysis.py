@@ -168,6 +168,34 @@ def test_jit_region_marker():
     assert _codes(src) == ["RA001"]
 
 
+def test_shard_map_body_is_a_jit_region():
+    # a shard_map body runs inside jit on every mesh device — host
+    # round-trips and python-controlled branches there are real traps
+    src = """
+    import functools
+    from jax.experimental.shard_map import shard_map
+    def _body(mesh, x):
+        n = float(x.sum())
+        return x / n
+    def run(mesh, specs, x):
+        return shard_map(functools.partial(_body, mesh), mesh=mesh,
+                         in_specs=specs, out_specs=specs)(x)
+    """
+    assert _codes(src) == ["RA001"]
+
+
+def test_shard_map_decorator_form_is_a_jit_region():
+    src = """
+    import functools
+    from jax.experimental.shard_map import shard_map
+    import numpy as np
+    @functools.partial(shard_map, mesh=None, in_specs=(), out_specs=())
+    def body(x):
+        return np.asarray(x)
+    """
+    assert _codes(src) == ["RA001"]
+
+
 def test_pallas_partial_bound_args_are_static():
     src = """
     import functools
