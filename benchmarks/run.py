@@ -13,6 +13,7 @@
   prefix  — prefix-cached pool vs no sharing (warm TTFT / concurrency)
   harness — tuned spec vs naive default at equal memory (load harness)
   sharded — dp x tp mesh cluster vs 1 device at equal cache/device
+  spec    — speculative vs target-only decode (tok/step at equal bytes)
 
 ``--devices N`` forces N host-platform devices; it must be applied
 before anything imports jax, so the benchmark modules are imported
@@ -143,6 +144,24 @@ def _sharded():
     yield f"bit_reproducible,=,{res['bit_reproducible']}"
 
 
+def _spec():
+    from benchmarks import speculative
+    r = speculative.run(arch="qwen1.5-0.5b", layers=1, spec_k=3,
+                        max_len=128, block_size=8, num_blocks=96,
+                        n_requests=8, max_new=24, max_batch=6,
+                        require_gain=1.5, out_json="BENCH_serving.json")
+    res = r["results"]
+    yield "metric,target_only,speculative"
+    yield (f"tokens_per_step,{res['tokens_per_step']['target_only']:.2f},"
+           f"{res['tokens_per_step']['speculative']:.2f}")
+    yield (f"steps,{res['steps']['target_only']},"
+           f"{res['steps']['speculative']}")
+    yield f"mean_accepted_len,=,{res['mean_accepted_len']:.2f}"
+    yield f"gain,1.00,{res['gain']:.2f}"
+    yield f"identical_streams,=,{res['identical_streams']}"
+    yield f"deterministic_replay,=,{res['deterministic_replay']}"
+
+
 def _figure(module: str):
     def fn():
         import importlib
@@ -163,6 +182,7 @@ SECTIONS = [
     ("prefix", _prefix),
     ("harness", _harness),
     ("sharded", _sharded),
+    ("spec", _spec),
 ]
 
 

@@ -1,0 +1,217 @@
+"""Speculative decoding vs target-only decode, at equal cache bytes.
+
+The fused speculative step (``serving/engine.py``) makes the draft
+propose ``k`` tokens and the target verify all ``k + 1`` positions in
+one chunk-shaped attend, so a decoding slot can emit up to ``k + 1``
+tokens per dispatch instead of 1.  On a greedy trace the emitted
+streams are *provably token-identical* to target-only decode (an
+accepted proposal IS the target argmax — see README "Speculative
+decoding"), so the whole win shows up as fewer fused steps for the same
+tokens.
+
+This benchmark self-drafts (draft arch == target arch, same weights):
+acceptance is then maximal and the measured gain is the machinery's
+ceiling, uncontaminated by draft quality.  Memory is equalized the
+honest way — the speculative engine pays for the draft's private dense
+cache, so the target-only baseline's paged pool is grown by the same
+number of bytes.
+
+Gates (CI runs ``--smoke``):
+
+* tokens/step gain >= ``--require-gain`` (default 1.5x; ISSUE-10's
+  acceptance floor) on the greedy trace,
+* 100% stream identity vs the target-only engine,
+* two fresh-engine replays byte-identical (deterministic metrics JSON
+  and token streams) — the per-slot PRNG lanes make speculation
+  replayable, not just fast.
+
+    PYTHONPATH=src python benchmarks/speculative.py
+    PYTHONPATH=src python benchmarks/speculative.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+try:                                   # package form (benchmarks.run)
+    from benchmarks._util import write_payload
+except ModuleNotFoundError:            # direct script invocation
+    from _util import write_payload
+
+from repro.configs import REGISTRY, reduced
+from repro.core.analytical import kv_bytes_per_token
+from repro.core.spec import (MemorySpec, RuntimeSpec, SchedulerSpec,
+                             SpeculationSpec)
+from repro.harness import replay, scripted_trace
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+def greedy_trace(n: int, max_len: int, max_new: int,
+                 seed: int = 0) -> list[tuple[list[int], int]]:
+    """Decode-heavy greedy workload: short mixed prompts, long budgets —
+    the regime speculation exists for."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.randint(2, max(max_len // 8, 3)))
+        prompt = [1 + int(t) for t in rng.randint(0, 50, size=plen)]
+        budget = int(rng.randint(max_new // 2, max_new + 1))
+        reqs.append((prompt, min(budget, max_len - plen - 1)))
+    return reqs
+
+
+def build(cfg, params, *, spec_k: int, max_batch: int, max_len: int,
+          block_size: int, num_blocks: int) -> ServingEngine:
+    speculation = SpeculationSpec(draft_model=cfg, k=spec_k) \
+        if spec_k else None
+    spec = RuntimeSpec(
+        arch=cfg,
+        memory=MemorySpec(cache_layout="paged", max_batch=max_batch,
+                          max_len=max_len, block_size=block_size,
+                          num_blocks=num_blocks),
+        scheduler=SchedulerSpec(policy="chunked",
+                                chunk_size=max(block_size, spec_k + 1)),
+        speculation=speculation)
+    eng = ServingEngine(spec, sampling=SamplingParams())   # greedy
+    eng.load(params, draft=params if speculation else None)
+    return eng
+
+
+def drive(eng: ServingEngine, reqs) -> dict:
+    trace = scripted_trace([(0, p, b) for p, b in reqs], name="spec-greedy")
+    res = replay(eng, trace)
+    m = res.metrics
+    return {"steps": m.steps, "tokens": m.total_new_tokens,
+            "tokens_per_step": m.tokens_per_step,
+            "mean_accepted_len": m.mean_accepted_len,
+            "seconds": m.wall_s, "tok_s": m.tokens_per_s,
+            "metrics_json": m.deterministic_json(),
+            "done": {res.uid_to_rid[r.uid]: r.generated
+                     for r in res.finished}}
+
+
+def run(arch: str, layers: int | None, spec_k: int, max_len: int,
+        block_size: int, num_blocks: int, n_requests: int, max_new: int,
+        max_batch: int, require_gain: float | None, out_json: str | None,
+        trace_seed: int = 7) -> dict:
+    over = {} if layers is None else {"num_layers": layers}
+    cfg = reduced(REGISTRY[arch], **over)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    reqs = greedy_trace(n_requests, max_len, max_new, trace_seed)
+
+    # equal cache bytes: the speculative engine carries a private dense
+    # draft cache; the target-only baseline gets the same bytes as extra
+    # pool blocks
+    per_tok = kv_bytes_per_token(cfg, "compute")
+    draft_blocks = max_batch * max_len * kv_bytes_per_token(cfg, "compute") \
+        // (block_size * per_tok)
+    base = build(cfg, params, spec_k=0, max_batch=max_batch,
+                 max_len=max_len, block_size=block_size,
+                 num_blocks=num_blocks + int(draft_blocks))
+    r_base = drive(base, reqs)
+
+    spec = build(cfg, params, spec_k=spec_k, max_batch=max_batch,
+                 max_len=max_len, block_size=block_size,
+                 num_blocks=num_blocks)
+    r_spec = drive(spec, reqs)
+
+    # determinism: a second fresh engine must replay byte-identically
+    spec2 = build(cfg, params, spec_k=spec_k, max_batch=max_batch,
+                  max_len=max_len, block_size=block_size,
+                  num_blocks=num_blocks)
+    r_spec2 = drive(spec2, reqs)
+
+    n_same = sum(r_base["done"][u] == r_spec["done"][u]
+                 for u in r_base["done"])
+    gain = r_spec["tokens_per_step"] / max(r_base["tokens_per_step"], 1e-9)
+    acc = r_spec["mean_accepted_len"]
+
+    print(f"arch={cfg.name}  k={spec_k}  max_len={max_len}  "
+          f"pool={num_blocks} x {block_size}-token blocks "
+          f"(+{int(draft_blocks)} blocks to the baseline = draft cache)")
+    print(f"  trace: {len(reqs)} greedy requests, <= {max_new} new tokens")
+    for name, r in (("target-only", r_base), ("speculative", r_spec)):
+        extra = "" if r["mean_accepted_len"] is None else \
+            f"   mean accepted {r['mean_accepted_len']:.2f}/{spec_k}"
+        print(f"  {name:12s}  {r['steps']:4d} steps for {r['tokens']} "
+              f"tokens   {r['tokens_per_step']:.2f} tok/step   "
+              f"{r['tok_s']:,.0f} tok/s{extra}")
+    print(f"  tokens/step gain {gain:.2f}x; identical streams "
+          f"{n_same}/{len(r_base['done'])}; decode compilations "
+          f"{spec.compilations['decode']}")
+
+    assert n_same == len(r_base["done"]), (
+        f"only {n_same}/{len(r_base['done'])} speculative streams matched "
+        "target-only decode — greedy speculation must be token-identical")
+    assert spec.compilations["decode"] == 1, (
+        f"speculative decode compiled {spec.compilations['decode']}x")
+    assert r_spec["metrics_json"] == r_spec2["metrics_json"] \
+        and r_spec["done"] == r_spec2["done"], (
+        "two fresh-engine speculative replays disagree — the per-slot "
+        "PRNG lanes are not replaying deterministically")
+    if require_gain is not None:
+        assert gain >= require_gain, (
+            f"tokens/step gain {gain:.2f}x below the required "
+            f"{require_gain:.2f}x")
+
+    results = {
+        "tokens_per_step": {"target_only": r_base["tokens_per_step"],
+                            "speculative": r_spec["tokens_per_step"]},
+        "steps": {"target_only": r_base["steps"],
+                  "speculative": r_spec["steps"]},
+        "gain": gain,
+        "mean_accepted_len": acc,
+        "identical_streams": f"{n_same}/{len(r_base['done'])}",
+        "deterministic_replay": True,
+        "tok_s": {"target_only": r_base["tok_s"],
+                  "speculative": r_spec["tok_s"]},
+    }
+    payload = {"benchmark": "speculative", "results": results}
+    if out_json:
+        payload = write_payload(
+            out_json, "speculative", arch=cfg.name,
+            config={"spec_k": spec_k, "max_len": max_len,
+                    "block_size": block_size, "num_blocks": num_blocks,
+                    "requests": n_requests, "max_new": max_new,
+                    "max_batch": max_batch, "self_draft": True},
+            results=results)
+        print(f"  appended to {out_json}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="speculative engine's pool (baseline gets the "
+                         "draft cache's bytes on top)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--trace-seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--require-gain", type=float, default=1.5,
+                    help="fail unless tokens/step improves this much")
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 1 layer, short trace, small max_len")
+    args = ap.parse_args()
+    if args.smoke:
+        args.layers, args.max_len, args.requests = 1, 128, 8
+        args.block_size, args.max_batch, args.max_new = 8, 6, 24
+    num_blocks = args.num_blocks or \
+        args.max_batch * args.max_len // args.block_size
+    run(args.arch, args.layers, args.spec_k, args.max_len, args.block_size,
+        num_blocks, args.requests, args.max_new, args.max_batch,
+        args.require_gain, args.json, trace_seed=args.trace_seed)
+
+
+if __name__ == "__main__":
+    main()

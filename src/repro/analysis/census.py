@@ -55,6 +55,7 @@ class MatrixPoint:
     harness: bool = False            # drive via repro.harness.replay
     tp: int = 1                      # MeshSpec.tp (GSPMD mesh width)
     dp: int = 1                      # MeshSpec.dp (EngineCluster replicas)
+    spec_k: int = 0                  # SpeculationSpec.k (0 = off)
 
 
 def support_matrix() -> tuple[MatrixPoint, ...]:
@@ -108,6 +109,16 @@ def support_matrix() -> tuple[MatrixPoint, ...]:
                     policy="chunked", tp=2),
         MatrixPoint("gqa-paged-dp2-chunked", cache_layout="paged",
                     policy="chunked", dp=2),
+        # speculative decoding: the draft-propose / target-verify /
+        # accept-rollback step must still be ONE decode compilation, and
+        # the workload must actually accept draft tokens (run_point
+        # asserts a non-vacuous acceptance count)
+        MatrixPoint("gqa-paged-spec-chunked", cache_layout="paged",
+                    policy="chunked", spec_k=2),
+        MatrixPoint("gqa-paged-spec-int8kv-chunked", cache_layout="paged",
+                    kv_dtype="int8", policy="chunked", spec_k=2),
+        MatrixPoint("fleet-paged-spec-chunked", cache_layout="paged",
+                    policy="chunked", fleet=True, spec_k=2),
     )
 
 
@@ -126,7 +137,8 @@ def build_engine(point: MatrixPoint):
 
     from repro.configs import REGISTRY, reduced
     from repro.core.spec import (ExecutionSpec, MemorySpec, MeshSpec,
-                                 RuntimeSpec, SchedulerSpec, maxima_for)
+                                 RuntimeSpec, SchedulerSpec, SpeculationSpec,
+                                 maxima_for)
     from repro.models.model import Model
     from repro.serving.cluster import EngineCluster
     from repro.serving.engine import ServingEngine
@@ -140,6 +152,11 @@ def build_engine(point: MatrixPoint):
                            d_model=48, num_heads=3, num_kv_heads=3,
                            d_ff=96, vocab_size=96)
         maxima = maxima_for(cfg, cfg_b, seq_max=64)
+    # spec points self-draft (draft arch == target arch, same weights):
+    # maximal acceptance with no second checkpoint, which is exactly what
+    # the non-vacuity assertion needs
+    speculation = SpeculationSpec(draft_model=cfg, k=point.spec_k) \
+        if point.spec_k else None
     spec = RuntimeSpec(
         arch=cfg, maxima=maxima,
         execution=ExecutionSpec(matmul_backend=point.matmul_backend,
@@ -149,14 +166,16 @@ def build_engine(point: MatrixPoint):
                           max_batch=4, max_len=64, block_size=8,
                           prefix_cache=point.prefix_cache),
         scheduler=SchedulerSpec(policy=point.policy),
-        mesh=MeshSpec(tp=point.tp, dp=point.dp))
+        mesh=MeshSpec(tp=point.tp, dp=point.dp),
+        speculation=speculation)
     if point.dp > 1:
         eng = EngineCluster(spec)
     else:
         eng = ServingEngine(
             spec, sampling=SamplingParams(),
             **({"max_models": 2} if maxima is not None else {}))
-    eng.load(Model(cfg).init(jax.random.PRNGKey(0)))
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    eng.load(params, **({"draft": params} if speculation else {}))
     if point.fleet:
         eng.add_model(Model(cfg_b).init(jax.random.PRNGKey(1)), cfg_b)
     return eng
@@ -166,8 +185,14 @@ def fingerprint_decode(eng) -> str:
     """sha256 of the fused decode step's canonicalized jaxpr."""
     import jax
 
+    params, cache = eng.params, eng.cache
+    if getattr(eng, "speculation", None) is not None:
+        # the speculative step's operands are (target, draft) pairs —
+        # the same tuples _dispatch composes
+        params = (eng.params, eng.draft_params)
+        cache = (eng.cache, eng.draft_cache)
     jaxpr = jax.make_jaxpr(eng._decode_impl)(
-        eng.params, eng.cache, eng.state, eng.block_tables)
+        params, cache, eng.state, eng.block_tables)
     text = _ADDR_RE.sub("0x0", str(jaxpr))
     return hashlib.sha256(text.encode()).hexdigest()[:16]
 
@@ -258,6 +283,13 @@ def run_point(point: MatrixPoint) -> dict[str, Any]:
         record["violation"] = (
             f"prefix cache hit {eng.stats['prefix_hits']}x on a workload "
             "with 2 shared-prefix requests — sharing is not engaging")
+    if point.spec_k:
+        record["spec_accepted"] = eng.stats["spec_accepted"]
+        record["spec_steps"] = eng.stats["spec_steps"]
+        if eng.stats["spec_accepted"] < 1:
+            record["violation"] = (
+                "speculation accepted 0 draft tokens on a self-drafting "
+                "greedy workload — the compile-count check is vacuous")
     return record
 
 

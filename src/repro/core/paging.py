@@ -188,6 +188,24 @@ class BlockAllocator:
                 zeros.append(b)
         return zeros
 
+    def truncate(self, blocks: list[int], keep: int) -> \
+            tuple[list[int], list[int]]:
+        """Block-tail truncate — the speculative-rollback release.
+
+        Drops this request's reference on ``blocks[keep:]`` and returns
+        ``(kept, zeros)``: the retained head and the tail blocks whose
+        refcount hit zero, in tail order.  Like :meth:`decref`, nothing
+        is freed here — the caller routes ``zeros`` through
+        ``PrefixCache.park`` (a trie-owned tail block parks, never
+        frees) and ``free``s the remainder.  A tail block another
+        request still maps just loses one reference and stays resident.
+        """
+        if keep < 0:
+            raise ValueError(f"cannot keep {keep} blocks")
+        if keep >= len(blocks):
+            return list(blocks), []
+        return list(blocks[:keep]), self.decref(blocks[keep:])
+
     def free(self, blocks: list[int]) -> None:
         """Return blocks to the free list.  Accepts refcount <= 1 (the
         sole owner may free directly, skipping decref); freeing a block

@@ -297,6 +297,55 @@ class SchedulerSpec:
 
 
 @dataclass(frozen=True)
+class SpeculationSpec:
+    """Speculative decoding: a small draft model proposes ``k`` tokens
+    per fused step and the target verifies all ``k + 1`` positions in a
+    single chunk-shaped attend (the PR 4 mixed-step machinery — lane
+    ``j`` of the verify pass scores position ``index + j`` against the
+    cache exactly like a prefill chunk lane).
+
+    * ``draft_model`` — the proposer's architecture.  It decodes from
+      its own private dense KV cache inside the same jitted step, so it
+      must share the target's tokenizer space: ``vocab_size`` must match
+      the serving arch (checked by ``RuntimeSpec.validate``).
+    * ``k`` — draft tokens proposed per step.  The verify pass rides the
+      chunk lanes, so ``k + 1 <= SchedulerSpec.chunk_size``.
+    * ``greedy_accept=True`` — accept proposal ``j + 1`` iff it equals
+      the target argmax at lane ``j`` (cumulative), which makes greedy
+      streams provably token-identical to target-only decode.  ``False``
+      uses standard rejection sampling on the softened distributions
+      (rows with temperature <= 0 still take the greedy path).
+    """
+
+    draft_model: ArchConfig
+    k: int = 3
+    greedy_accept: bool = True
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.draft_model, ArchConfig):
+            raise ValueError(
+                "SpeculationSpec.draft_model must be an ArchConfig, got "
+                f"{type(self.draft_model).__name__}")
+        self.draft_model.validate()
+        if self.k < 1:
+            raise ValueError(
+                f"SpeculationSpec.k={self.k} must be >= 1 (propose at "
+                "least one draft token per step)")
+        if self.draft_model.family not in CHUNKABLE_FAMILIES:
+            raise ValueError(
+                f"SpeculationSpec.draft_model family "
+                f"{self.draft_model.family!r} cannot draft: proposals ride "
+                "the fused mixed step, which needs an attention KV cache "
+                f"(families {CHUNKABLE_FAMILIES})")
+
+    @property
+    def horizon(self) -> int:
+        """Positions a decoding slot may consume per fused step (the
+        ``k`` proposals plus the bonus/correction token)."""
+        return self.k + 1
+
+
+@dataclass(frozen=True)
 class MeshSpec:
     """How one runnable configuration maps onto devices.
 
@@ -358,8 +407,10 @@ class RuntimeSpec:
     ``arch`` is *what* runs, ``maxima`` is the fabric it must fit (None =
     a dedicated fabric exactly ``arch``-sized), ``execution`` is how it
     computes, ``memory`` is how its decode state is laid out,
-    ``scheduler`` is how the serving engine feeds it, and ``mesh`` is
-    how many devices cooperate on (tp) and replicate (dp) the result.
+    ``scheduler`` is how the serving engine feeds it, ``mesh`` is how
+    many devices cooperate on (tp) and replicate (dp) the result, and
+    ``speculation`` (optional) is the draft model that proposes tokens
+    the target verifies in bulk.
     """
 
     arch: ArchConfig
@@ -368,6 +419,7 @@ class RuntimeSpec:
     memory: MemorySpec = field(default_factory=MemorySpec)
     scheduler: SchedulerSpec = field(default_factory=SchedulerSpec)
     mesh: MeshSpec = field(default_factory=MeshSpec)
+    speculation: SpeculationSpec | None = None
 
     def __post_init__(self) -> None:
         self.validate()
@@ -410,6 +462,38 @@ class RuntimeSpec:
                 raise ValueError(
                     "scheduler policy 'chunked' is not satisfiable: "
                     + "; ".join(bad))
+        if self.speculation is not None:
+            sp = self.speculation
+            if self.scheduler.policy == "bucketed":
+                raise ValueError(
+                    "speculation requires the chunked scheduler: the "
+                    "draft-propose / target-verify pass is fused into the "
+                    "chunk-shaped mixed step (the bucketed path has no "
+                    "multi-position attend); use policy='auto' or 'chunked'")
+            bad = self.scheduler.chunk_violations(self.memory)
+            if self.maxima is None and cfg.family not in CHUNKABLE_FAMILIES:
+                bad.append(
+                    f"family {cfg.family!r} has sequential prefill state "
+                    "(the verify pass needs the fused chunked step)")
+            if bad:
+                raise ValueError(
+                    "speculation requires a satisfiable chunked scheduler: "
+                    + "; ".join(bad))
+            chunk = min(self.scheduler.chunk_size, self.memory.max_len)
+            if sp.horizon > chunk:
+                raise ValueError(
+                    f"SpeculationSpec.k={sp.k} needs {sp.horizon} verify "
+                    f"lanes but the fused step has only chunk_size={chunk} "
+                    "(raise SchedulerSpec.chunk_size or lower k)")
+            target_vocab = (self.maxima.vocab if self.maxima is not None
+                            else cfg.vocab_size)
+            if sp.draft_model.vocab_size != target_vocab:
+                raise ValueError(
+                    f"speculation draft vocab_size="
+                    f"{sp.draft_model.vocab_size} != target vocab "
+                    f"{target_vocab}: draft proposals are verified as "
+                    "target token ids, so the models must share a "
+                    "tokenizer space")
         if self.mesh.tp > 1:
             if self.maxima is not None:
                 raise ValueError(

@@ -27,6 +27,14 @@ way in ``tests/test_harness.py``):
   No interpolation, so toy-trace expectations are exact.
 * **Peak concurrency** — running sum over the event stream
   (``admit`` +1, ``finish``/``preempt`` -1), maxed.
+* **Mean accepted draft length** — speculative decoding only: total
+  accepted draft tokens over total speculative fused steps, both read
+  from the cumulative ``accepted`` / ``spec_steps`` counters on
+  ``progress`` events (a decrease in ``accepted`` is a preemption
+  reset: the previous epoch's totals are banked and the counter
+  re-baselines, mirroring the ITL rule).  ``None`` when no step
+  speculated.  Tokens/step for a speculating slot is then
+  ``1 + mean_accepted_len``.
 * **SLO / goodput** — a request meets the :class:`SLO` iff it finished,
   its TTFT (steps) is within ``slo.ttft_steps``, and its worst
   per-token ITL (steps) is within ``slo.itl_steps`` (each bound
@@ -69,6 +77,9 @@ class HarnessMetrics:
     steps: int                      # event-stream step span
     total_new_tokens: int
     tokens_per_step: float
+    spec_accepted_tokens: int       # accepted draft tokens (speculation)
+    spec_steps: int                 # fused steps that speculated
+    mean_accepted_len: float | None  # accepted/steps; None without spec
     ttft_steps_p50: float | None
     ttft_steps_p99: float | None
     itl_steps_p50: float | None
@@ -112,7 +123,8 @@ class _ReqState:
     """Per-request accumulator while scanning the event stream."""
 
     __slots__ = ("submit_step", "submit_t", "ft_step", "ttft_s", "finished",
-                 "n_generated", "itl_steps", "itl_s", "base")
+                 "n_generated", "itl_steps", "itl_s", "base",
+                 "spec_acc", "spec_steps", "spec_base")
 
     def __init__(self) -> None:
         self.submit_step = None
@@ -124,8 +136,19 @@ class _ReqState:
         self.itl_steps: list[float] = []
         self.itl_s: list[float] = []
         self.base = None          # (count, step, t) ITL baseline
+        self.spec_acc = 0         # accepted tokens banked across preemptions
+        self.spec_steps = 0       # speculative steps banked likewise
+        self.spec_base = None     # (accepted, spec_steps) cumulative epoch
 
     def on_progress(self, e: EngineEvent) -> None:
+        a = e.data.get("accepted")
+        if a is not None:
+            ss = e.data.get("spec_steps", 0)
+            if self.spec_base is not None and a < self.spec_base[0]:
+                # preemption reset: bank the epoch, re-baseline
+                self.spec_acc += self.spec_base[0]
+                self.spec_steps += self.spec_base[1]
+            self.spec_base = (a, ss)
         c = e.data["count"]
         if c >= 1 and self.ttft_s is None and self.submit_t is not None:
             self.ttft_s = e.t - self.submit_t
@@ -147,6 +170,15 @@ class _ReqState:
         if self.ft_step is None or self.submit_step is None:
             return None
         return self.ft_step - self.submit_step
+
+    def spec_totals(self) -> tuple[int, int]:
+        """(accepted draft tokens, speculative steps) including the
+        still-open epoch."""
+        acc, steps = self.spec_acc, self.spec_steps
+        if self.spec_base is not None:
+            acc += self.spec_base[0]
+            steps += self.spec_base[1]
+        return acc, steps
 
     def meets(self, slo: SLO | None) -> bool:
         if not self.finished:
@@ -206,6 +238,8 @@ def reduce_events(events: list[EngineEvent],
     n_finished = sum(r.finished for r in reqs.values())
     n_met = sum(r.meets(slo) for r in reqs.values())
     total_new = sum(r.n_generated for r in reqs.values())
+    spec_acc = sum(r.spec_totals()[0] for r in reqs.values())
+    spec_steps = sum(r.spec_totals()[1] for r in reqs.values())
     per_request = {
         uid: {"ttft_steps": r.ttft_steps(), "finished": r.finished,
               "n_generated": r.n_generated,
@@ -223,6 +257,9 @@ def reduce_events(events: list[EngineEvent],
         steps=steps,
         total_new_tokens=total_new,
         tokens_per_step=total_new / max(steps, 1),
+        spec_accepted_tokens=spec_acc,
+        spec_steps=spec_steps,
+        mean_accepted_len=(spec_acc / spec_steps) if spec_steps else None,
         ttft_steps_p50=percentile(ttfts, 50),
         ttft_steps_p99=percentile(ttfts, 99),
         itl_steps_p50=percentile(itls, 50),

@@ -33,14 +33,26 @@ from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.analytical import (V5E, TPUSpec, analytical_step_seconds,
                                    kv_bytes_per_token, weight_bytes)
 from repro.core.spec import (CHUNKABLE_FAMILIES, ExecutionSpec, MemorySpec,
-                             MeshSpec, RuntimeSpec, SchedulerSpec)
+                             MeshSpec, RuntimeSpec, SchedulerSpec,
+                             SpeculationSpec)
 
 # Enumerated knob grids.  Small on purpose: the analytical model makes
 # each point ~free, but the benchmark that *verifies* the winner is not.
 _BLOCK_SIZES = (8, 16, 32)
 _CHUNK_SIZES = (16, 32, 64)
 _BUDGET_MULT = (2, 4, 8)
+_SPEC_KS = (2, 4)            # draft depths searched (k=0 = no speculation)
 _MAX_BATCH_CAP = 64          # host-side per-slot bookkeeping ceiling
+
+
+def expected_accepted(k: int, a: float) -> float:
+    """Expected tokens per speculative step at per-token acceptance ``a``:
+    ``E(k, a) = sum_{i=0..k} a^i = (1 - a^{k+1}) / (1 - a)`` — the
+    accepted prefix run plus the always-emitted bonus/correction token.
+    Monotone in both arguments, ``1`` at ``a = 0`` (speculation never
+    emits fewer tokens than plain decode), ``k + 1`` at ``a -> 1``."""
+    a = min(max(a, 0.0), 0.999)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
 
 
 @dataclass(frozen=True)
@@ -97,6 +109,11 @@ class WorkloadProfile:
     burst_size: int = 8              # peak simultaneous arrivals
     shared_prefix_frac: float = 0.0  # fraction of requests sharing a prefix
     shared_prefix_len: int = 0       # tokens of that shared prefix
+    # expected per-token probability the target accepts a draft proposal
+    # (workload-dependent: ~1 for greedy self-drafting, lower the further
+    # the draft sits from the target); 0 keeps speculation out of the
+    # candidate space
+    draft_acceptance: float = 0.0
 
     @staticmethod
     def from_trace(trace) -> "WorkloadProfile":
@@ -142,6 +159,8 @@ class Candidate:
                 "kv_dtype": m.kv_dtype, "prefix_cache": m.prefix_cache,
                 "policy": s.policy, "chunk_size": s.chunk_size,
                 "token_budget": s.resolved_token_budget,
+                "spec_k": self.spec.speculation.k
+                if self.spec.speculation is not None else 0,
                 "score": self.score, "cache_bytes": self.cache_bytes,
                 "predicted_ttft_s": self.predicted_ttft_s,
                 "predicted_itl_s": self.predicted_itl_s}
@@ -170,12 +189,17 @@ def _per_token_bytes(arch: ArchConfig, kv_dtype: str, maxima) -> int:
 
 
 def cache_bytes(spec: RuntimeSpec) -> int:
-    """KV-cache bytes a spec provisions (the equal-memory yardstick)."""
+    """KV-cache bytes a spec provisions (the equal-memory yardstick).
+    A speculative spec also pays for the draft's private dense cache —
+    equal-memory comparisons must charge speculation its real rent."""
     per_tok = _per_token_bytes(spec.arch, spec.memory.kv_dtype, spec.maxima)
     m = spec.memory
-    if m.cache_layout == "paged":
-        return m.resolved_num_blocks * m.block_size * per_tok
-    return m.max_batch * m.max_len * per_tok
+    total = m.resolved_num_blocks * m.block_size * per_tok \
+        if m.cache_layout == "paged" else m.max_batch * m.max_len * per_tok
+    if spec.speculation is not None:
+        total += m.max_batch * m.max_len * kv_bytes_per_token(
+            spec.speculation.draft_model, "compute")
+    return total
 
 
 def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
@@ -216,7 +240,21 @@ def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
             / cand.scheduler.resolved_token_budget
         frac = prefill_steps / max(prefill_steps + workload.mean_new_tokens,
                                    1.0)
-        itl = frac * t_mixed + (1.0 - frac) * t_decode
+        t_dec_eff = t_decode
+        if cand.speculation is not None:
+            # speculative steady state: one fused step pays k one-lane
+            # draft decodes plus the target's k+1-lane verify (the verify
+            # is roofline-equivalent to a decode step — both stream the
+            # same weights and KV, the extra query lanes are ~free) and
+            # yields E(k, a) tokens
+            sp = cand.speculation
+            t_draft = analytical_step_seconds(
+                sp.draft_model, ShapeSpec("tune_draft", kv_depth, B,
+                                          "decode"),
+                chips, tpu, dtype_bytes, tp=tp).t_total
+            t_dec_eff = (sp.k * t_draft + t_decode) / expected_accepted(
+                sp.k, workload.draft_acceptance)
+        itl = frac * t_mixed + (1.0 - frac) * t_dec_eff
     else:
         # bucketed: one B=1 prefill dispatch per request, decode stalls
         # behind it, and a burst larger than the batch waits whole turns
@@ -234,19 +272,31 @@ def _predict(arch: ArchConfig, cand: RuntimeSpec, device: DeviceProfile,
 def _candidates(arch: ArchConfig, device: DeviceProfile,
                 workload: WorkloadProfile, max_len: int, budget: int,
                 execution: ExecutionSpec, kv_dtypes: tuple[str, ...],
-                maxima, mesh: MeshSpec = MeshSpec()) -> list[RuntimeSpec]:
+                maxima, mesh: MeshSpec = MeshSpec(),
+                draft: ArchConfig | None = None) -> list[RuntimeSpec]:
     chunkable = arch.family in CHUNKABLE_FAMILIES
     pageable = arch.family in ("dense", "vlm", "moe")
     live_tokens = workload.effective_prompt_len + workload.mean_new_tokens
+    # speculation variants ride every chunked point (k=0 is the point
+    # itself); the spec's own validation prunes infeasible geometry
+    # (horizon > chunk, vocab mismatch, non-chunkable draft)
+    speculations: tuple[SpeculationSpec | None, ...] = (None,)
+    if draft is not None and workload.draft_acceptance > 0.0:
+        speculations += tuple(SpeculationSpec(draft_model=draft, k=kk)
+                              for kk in _SPEC_KS)
+
     out: list[RuntimeSpec] = []
 
     def add(memory: MemorySpec, scheduler: SchedulerSpec) -> None:
-        try:
-            out.append(RuntimeSpec(arch=arch, maxima=maxima,
-                                   execution=execution, memory=memory,
-                                   scheduler=scheduler, mesh=mesh))
-        except ValueError:
-            pass    # geometry the spec itself rejects is not a candidate
+        specs = speculations if scheduler.policy == "chunked" else (None,)
+        for sp in specs:
+            try:
+                out.append(RuntimeSpec(arch=arch, maxima=maxima,
+                                       execution=execution, memory=memory,
+                                       scheduler=scheduler, mesh=mesh,
+                                       speculation=sp))
+            except ValueError:
+                pass  # geometry the spec itself rejects is not a candidate
 
     for kv_dtype in kv_dtypes:
         per_tok = _per_token_bytes(arch, kv_dtype, maxima)
@@ -304,7 +354,8 @@ def _candidates(arch: ArchConfig, device: DeviceProfile,
 def tune(arch: ArchConfig, device: DeviceProfile | None = None,
          workload: WorkloadProfile | None = None, *,
          max_len: int | None = None, execution: ExecutionSpec | None = None,
-         allow_int8_kv: bool = False, maxima=None) -> TuneResult:
+         allow_int8_kv: bool = False, maxima=None,
+         draft: ArchConfig | None = None) -> TuneResult:
     """Rank candidate runtime configurations for ``arch`` and return the
     predicted-best under the device's cache-memory budget.
 
@@ -313,6 +364,12 @@ def tune(arch: ArchConfig, device: DeviceProfile | None = None,
     capacity against it when explicitly allowed.  ``execution`` (kernel
     backend, weight quant, dtypes) is passed through unsearched — kernel
     routing is benchmarked separately and is workload-independent.
+
+    ``draft`` adds speculative-decoding points (``spec_k`` in
+    ``_SPEC_KS``) to the chunked candidates; their decode term is scaled
+    by the analytical acceptance model ``expected_accepted(k,
+    workload.draft_acceptance)``, so a workload that reports low draft
+    agreement prices speculation out on its own.
     """
     device = device or DeviceProfile()
     workload = workload or WorkloadProfile()
@@ -331,7 +388,7 @@ def tune(arch: ArchConfig, device: DeviceProfile | None = None,
         # candidate's geometry is *per replica* (what one engine sees)
         cands += _candidates(arch, device, workload, max_len,
                              budget // mesh.dp, execution, kv_dtypes,
-                             maxima, mesh=mesh)
+                             maxima, mesh=mesh, draft=draft)
     if not cands:
         raise ValueError(
             f"no feasible configuration for {arch.family!r} arch under a "

@@ -73,6 +73,14 @@ def main() -> None:
                     help="share prompt-prefix KV blocks across requests "
                          "(requires --cache-layout paged; rejected at spec "
                          "construction otherwise)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                         "fused step (0 disables); the target verifies all "
+                         "k+1 positions in one chunk-shaped attend")
+    ap.add_argument("--draft", default=None,
+                    help="draft arch id for --spec-k (default: the target "
+                         "itself, i.e. self-draft; must share the target's "
+                         "vocab / tokenizer space)")
     ap.add_argument("--trace", default=None,
                     help="replay this on-disk trace (repro.harness.trace "
                          "format) instead of the demo request mix and print "
@@ -87,6 +95,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.tuned and args.fleet:
         ap.error("--tuned tunes a single architecture; drop --fleet")
+    if args.spec_k and (args.fleet or args.tuned or args.dp > 1):
+        ap.error("--spec-k drives one hand-specified engine in this "
+                 "driver; drop --fleet/--tuned/--dp")
     if args.dp > 1 and args.fleet:
         ap.error("--dp replicates one architecture; drop --fleet")
     need = args.tp * args.dp
@@ -140,6 +151,16 @@ def main() -> None:
               f"chunk={spec.scheduler.chunk_size} "
               f"kv_dtype={m.kv_dtype} prefix_cache={m.prefix_cache}")
     else:
+        speculation = draft_cfg = None
+        if args.spec_k:
+            from repro.core.spec import SpeculationSpec
+            draft_cfg = (reduced(REGISTRY[args.draft]) if args.draft
+                         else cfgs[0])
+            # a temperature > 0 demo mix needs the rejection-sampling
+            # accept path; greedy runs take the exact argmax-match path
+            speculation = SpeculationSpec(
+                draft_model=draft_cfg, k=args.spec_k,
+                greedy_accept=args.temperature <= 0.0)
         spec = RuntimeSpec(
             arch=cfgs[0], maxima=maxima,
             execution=execution,
@@ -148,7 +169,8 @@ def main() -> None:
                               block_size=args.block_size,
                               num_blocks=args.num_blocks,
                               kv_dtype=args.kv_dtype,
-                              prefix_cache=args.prefix_cache))
+                              prefix_cache=args.prefix_cache),
+            speculation=speculation)
     if args.tp > 1 or args.dp > 1:
         spec = dataclasses.replace(
             spec, mesh=MeshSpec(tp=args.tp, dp=args.dp))
@@ -162,7 +184,13 @@ def main() -> None:
         model_ids = [eng.add_model(Model(c).init(jax.random.PRNGKey(i)), c)
                      for i, c in enumerate(cfgs)]
     else:
-        eng.load(Model.from_spec(spec).init(jax.random.PRNGKey(0)))
+        params = Model.from_spec(spec).init(jax.random.PRNGKey(0))
+        if args.spec_k:
+            draft = (params if draft_cfg == cfgs[0]
+                     else Model(draft_cfg).init(jax.random.PRNGKey(1)))
+            eng.load(params, draft=draft)
+        else:
+            eng.load(params)
         model_ids = [0]
 
     if trace is not None:
@@ -224,6 +252,13 @@ def main() -> None:
                   f"prompt[:6]={r.prompt[:6]} -> {r.generated[:10]}...")
         return
     print("compile accounting:", eng.compilations)
+    if args.spec_k:
+        acc, ss = eng.stats["spec_accepted"], eng.stats["spec_steps"]
+        mean = acc / ss if ss else 0.0
+        print(f"speculation: k={args.spec_k} draft={draft_cfg.name}, "
+              f"{acc} draft tokens accepted over {ss} speculative steps "
+              f"(mean {mean:.2f}; ~{1 + mean:.2f} tokens/step per "
+              "decoding slot)")
     if spec.memory.kv_dtype == "int8":
         hd = cfgs[0].resolved_head_dim
         print(f"int8 KV cache: {2 * hd / (hd + 4):.2f}x fewer cache "

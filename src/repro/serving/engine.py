@@ -89,7 +89,9 @@ from repro.models.model import Model
 from repro.serving.events import EngineEvent, EventBus
 from repro.serving.events import now as _now
 from repro.serving.fabric import N_REGS, DecodeFabric
-from repro.serving.sampling import SamplingParams, sample_per_slot
+from repro.serving.sampling import (SamplingParams, fold_in_keys,
+                                    sample_per_slot, speculative_accept,
+                                    split_keys)
 
 # The always-on summary counters.  These are *derived* telemetry kept for
 # backward compatibility (tests and benchmarks read them); anything
@@ -97,7 +99,8 @@ from repro.serving.sampling import SamplingParams, sample_per_slot
 # (``serving.events`` / ``engine.events``) instead of growing this dict.
 _STAT_KEYS = ("decode_steps", "device_gets", "harvest_elems", "preemptions",
               "prefill_tokens", "max_step_prefill_tokens", "prefix_hits",
-              "prefix_hit_tokens", "cow_forks", "prefix_evictions")
+              "prefix_hit_tokens", "cow_forks", "prefix_evictions",
+              "spec_steps", "spec_accepted")
 
 
 @dataclasses.dataclass
@@ -131,12 +134,18 @@ class SlotState(NamedTuple):
     top_k: jax.Array   # [B]    i32  top-k cutoff (0 = disabled)
     top_p: jax.Array   # [B]    f32  nucleus threshold (1 = disabled)
     buf: jax.Array     # [B, max_len] i32 generated tokens
-    rng: jax.Array     # PRNG key threaded through the fused step
+    # [B, 2] u32 per-slot PRNG key lanes, split once per fused step: each
+    # slot's sampling stream is a pure function of its own lane, so a
+    # harness replay is byte-identical regardless of batch composition
+    rng: jax.Array
     topo: jax.Array    # [B, N_REGS] i32 per-slot topology registers
     # chunked-prefill progress (the token-budget scheduler's device side)
     prompt_buf: jax.Array  # [B, max_len] i32 prompt tokens, chunk source
     prompt_len: jax.Array  # [B] i32 total prompt length
     pf_pos: jax.Array      # [B] i32 prompt tokens already written to cache
+    # speculative-decoding accounting (zeros when speculation is off)
+    acc: jax.Array         # [B] i32 accepted draft tokens, cumulative
+    spec_steps: jax.Array  # [B] i32 fused steps this slot spec-decoded in
 
 
 class _Compilations(dict):
@@ -262,6 +271,38 @@ class ServingEngine:
             self.scheduler = sched.policy
         self.chunk_size = min(sched.chunk_size, self.max_len)
         self.token_budget = sched.resolved_token_budget
+
+        # ---- speculation: a draft model rides the fused step -------------
+        # The draft decodes from its OWN private dense cache inside the
+        # same jitted program (propose k tokens, one masked lane each),
+        # then the target verifies all k+1 positions as a chunk-shaped
+        # attend.  ``spec_horizon`` = k+1 is the positions a decoding slot
+        # may consume per fused step — block budgeting scales by it.
+        sp = spec.speculation
+        self.speculation = sp
+        self.spec_horizon = 1 if sp is None else sp.horizon
+        self.draft_model: Model | None = None
+        self.draft_params: Any = None
+        self.draft_cache: Any = None
+        if sp is not None:
+            if self.scheduler != "chunked":
+                raise ValueError(
+                    "speculation requires the chunked scheduler, but policy "
+                    "'auto' resolved to 'bucketed' for this spec; fix the "
+                    "chunk geometry so chunked is satisfiable")
+            if sp.horizon > self.chunk_size:
+                raise ValueError(
+                    f"SpeculationSpec.k={sp.k} needs {sp.horizon} verify "
+                    f"lanes but the engine's chunk width is "
+                    f"{self.chunk_size}; raise SchedulerSpec.chunk_size")
+            from repro.models.model import ModelOptions
+            # the draft's cache is always dense + compute-dtype: it is
+            # small, rolls back by index rewind alone, and never pages
+            self.draft_model = Model(
+                sp.draft_model,
+                dataclasses.replace(
+                    ModelOptions.from_execution(spec.execution),
+                    kv_dtype="compute"))
 
         # ---- tensor-parallel mesh (spec.mesh.tp devices per fused step) --
         # MeshSpec(tp=1) without an explicit device list is the historical
@@ -468,11 +509,13 @@ class ServingEngine:
             top_k=jnp.zeros((B,), jnp.int32),
             top_p=jnp.ones((B,), jnp.float32),
             buf=jnp.zeros((B, self.max_len), jnp.int32),
-            rng=rng,
+            rng=jax.random.split(rng, B),
             topo=jnp.zeros((B, N_REGS), jnp.int32),
             prompt_buf=jnp.zeros((B, self.max_len), jnp.int32),
             prompt_len=jnp.zeros((B,), jnp.int32),
-            pf_pos=jnp.zeros((B,), jnp.int32))
+            pf_pos=jnp.zeros((B,), jnp.int32),
+            acc=jnp.zeros((B,), jnp.int32),
+            spec_steps=jnp.zeros((B,), jnp.int32))
 
     def _emit(self, kind: str, uid: int, **data) -> None:
         """Publish one lifecycle event (no-op without subscribers).  The
@@ -490,22 +533,54 @@ class ServingEngine:
             self.events.publish(EngineEvent(
                 "first_token", uid, self.stats["decode_steps"], _now(), {}))
 
-    def load(self, params) -> None:
+    def load(self, params, draft=None) -> None:
         """Install weights (quantized here when ``spec.execution.quant``
         asks for it).  Multi-topology mode: equivalent to
-        ``add_model(params)`` for the engine's own architecture."""
+        ``add_model(params)`` for the engine's own architecture.
+        ``draft`` installs the speculation draft's weights in the same
+        call (sugar for :meth:`load_draft`)."""
+        if draft is not None and self.speculation is None:
+            raise ValueError(
+                "load(draft=...) requires spec.speculation — construct the "
+                "RuntimeSpec with speculation=SpeculationSpec(...)")
         if self.fabric is not None:
             self.add_model(params)
-            return
+        else:
+            if self.spec.execution.quant == "int8":
+                from repro.core.serve_quant import quantize_params
+                params = quantize_params(
+                    params, min_size=self.spec.execution.quant_min_size)
+            self.params = params
+            self.cache = self.model.init_cache(self.max_batch, self.max_len,
+                                               paging=self.paging)
+            if self._mesh is not None or self._device is not None:
+                self._shard_arrays()
+        if draft is not None:
+            self.load_draft(draft)
+
+    def load_draft(self, params) -> None:
+        """Install the speculation draft's weights and its private dense
+        KV cache.  The draft never pages and never quantizes its cache —
+        it is small by design, and rejected-suffix rollback on a dense
+        cache is a pure index rewind (stale rows are masked by the causal
+        window and overwritten on the next propose pass).  On a TP mesh
+        the draft replicates whole — its work is k one-lane decodes."""
+        if self.speculation is None:
+            raise ValueError(
+                "load_draft requires spec.speculation — construct the "
+                "RuntimeSpec with speculation=SpeculationSpec(...)")
         if self.spec.execution.quant == "int8":
             from repro.core.serve_quant import quantize_params
             params = quantize_params(
                 params, min_size=self.spec.execution.quant_min_size)
-        self.params = params
-        self.cache = self.model.init_cache(self.max_batch, self.max_len,
-                                           paging=self.paging)
-        if self._mesh is not None or self._device is not None:
-            self._shard_arrays()
+        self.draft_params = params
+        self.draft_cache = self.draft_model.init_cache(self.max_batch,
+                                                       self.max_len)
+        if self._placement is not None:
+            self.draft_params = jax.device_put(self.draft_params,
+                                               self._placement)
+            self.draft_cache = jax.device_put(self.draft_cache,
+                                              self._placement)
 
     @property
     def _placement(self):
@@ -699,8 +774,8 @@ class ServingEngine:
         every per-slot field — all on device, no host round trip.
         ``topo`` writes the slot's topology registers (zeros when the
         engine serves a single fixed architecture)."""
-        rng, k = jax.random.split(state.rng)
-        first = sample_per_slot(last_logits, k, temp[None], top_k[None],
+        ks = jax.random.split(state.rng[slot])
+        first = sample_per_slot(last_logits, ks[1:], temp[None], top_k[None],
                                 top_p[None])[0]
         # spent: a 1-token budget is consumed by the prefill sample, an
         # eos prefill sample ends the request, and a max_len prompt has
@@ -719,11 +794,13 @@ class ServingEngine:
             top_k=state.top_k.at[slot].set(top_k),
             top_p=state.top_p.at[slot].set(top_p),
             buf=state.buf.at[slot].set(0).at[slot, 0].set(first),
-            rng=rng,
+            rng=state.rng.at[slot].set(ks[0]),
             topo=state.topo.at[slot].set(topo),
             prompt_buf=state.prompt_buf,
             prompt_len=state.prompt_len.at[slot].set(plen),
-            pf_pos=state.pf_pos.at[slot].set(plen))  # bucketed: prefilled
+            pf_pos=state.pf_pos.at[slot].set(plen),  # bucketed: prefilled
+            acc=state.acc.at[slot].set(0),
+            spec_steps=state.spec_steps.at[slot].set(0))
 
     def _admit_chunk_impl(self, state: SlotState, slot, toks, plen, budget,
                           eos, temp, top_k, top_p, topo,
@@ -752,7 +829,9 @@ class ServingEngine:
             topo=state.topo.at[slot].set(topo),
             prompt_buf=state.prompt_buf.at[slot].set(toks),
             prompt_len=state.prompt_len.at[slot].set(plen),
-            pf_pos=state.pf_pos.at[slot].set(start))
+            pf_pos=state.pf_pos.at[slot].set(start),
+            acc=state.acc.at[slot].set(0),
+            spec_steps=state.spec_steps.at[slot].set(0))
 
     def _cow_impl(self, cache, src, dst):
         """Fork pool block ``src`` into ``dst`` across every cache leaf
@@ -773,14 +852,21 @@ class ServingEngine:
             count=state.count.at[slot].set(0),
             index=state.index.at[slot].set(0),
             prompt_len=state.prompt_len.at[slot].set(0),
-            pf_pos=state.pf_pos.at[slot].set(0))
+            pf_pos=state.pf_pos.at[slot].set(0),
+            acc=state.acc.at[slot].set(0),
+            spec_steps=state.spec_steps.at[slot].set(0))
 
     def _decode_impl(self, params, cache, state: SlotState, block_tables):
         """The fused device step: decode -> sample -> scatter token ->
         advance indices/budgets -> raise done flags.  One dispatch, zero
-        host syncs."""
+        host syncs.  With speculation on, the steady-state decode program
+        is the draft-propose / target-verify step specialized to zero
+        prompt lanes (``decode_only``) — still exactly one compilation."""
+        if self.speculation is not None:
+            return self._spec_impl(params, cache, state, block_tables,
+                                   None, decode_only=True)
         with backend.use(self.matmul_backend), self._mesh_scope():
-            rng, k = jax.random.split(state.rng)
+            rng, keys = split_keys(state.rng)
             if self.fabric is not None:
                 logits, cache = self.fabric.decode_step(
                     params, cache, state.last, state.index, state.topo,
@@ -791,8 +877,8 @@ class ServingEngine:
                 logits, cache = self._traced_model.decode_step(
                     params, cache, state.last, state.index,
                     block_tables=block_tables)
-            toks = sample_per_slot(logits[:, 0], k, state.temp, state.top_k,
-                                   state.top_p)
+            toks = sample_per_slot(logits[:, 0], keys, state.temp,
+                                   state.top_k, state.top_p)
 
             act = state.active
             act_i = act.astype(jnp.int32)
@@ -826,9 +912,12 @@ class ServingEngine:
         nothing for idle ones — then samples, scatters tokens and
         advances indices/budgets/eos flags.  Zero host syncs; chunk
         grants are data, so this traces exactly once."""
+        if self.speculation is not None:
+            return self._spec_impl(params, cache, state, block_tables,
+                                   chunk_len, decode_only=False)
         with backend.use(self.matmul_backend), self._mesh_scope():
             B, W = self.max_batch, self.chunk_size
-            rng, k = jax.random.split(state.rng)
+            rng, keys = split_keys(state.rng)
             prefilling = chunk_len > 0
             decoding = state.active & (state.pf_pos >= state.prompt_len)
             n_live = jnp.where(prefilling, chunk_len,
@@ -860,7 +949,7 @@ class ServingEngine:
             sel = jnp.where(completes, chunk_len - 1, 0)
             lsel = jnp.take_along_axis(logits, sel[:, None, None],
                                        axis=1)[:, 0]
-            toks_s = sample_per_slot(lsel, k, state.temp, state.top_k,
+            toks_s = sample_per_slot(lsel, keys, state.temp, state.top_k,
                                      state.top_p)
 
             emit = decoding | completes   # slots producing a token now
@@ -884,6 +973,191 @@ class ServingEngine:
                 rng=rng,
                 pf_pos=pf_pos)
             return self._pin_outputs(cache, state)
+
+    def _spec_impl(self, params, cache, state: SlotState, block_tables,
+                   chunk_len, decode_only: bool):
+        """The speculative fused step: draft-propose -> target-verify ->
+        accept/rollback, ONE dispatch, zero host syncs.
+
+        ``params``/``cache`` are ``(target, draft)`` pairs — the draft
+        decodes from its own private dense cache inside this same jitted
+        program.  Per decoding slot: the draft proposes ``k`` tokens
+        (one masked ``mixed_step`` lane each, positions ``index + j``),
+        then the target scores all ``k + 1`` positions in a single
+        chunk-shaped attend — exactly the chunked-prefill machinery
+        (``gqa_mixed``/``gqa_mixed_paged`` walking the block tables), so
+        a verify pass costs one mixed dispatch, not k+1 decode steps.
+        Acceptance is cumulative (``serving.sampling.speculative_accept``)
+        and the *rollback is an index rewind*: ``index`` advances only by
+        the accepted length m <= k+1, so the rejected suffix's stale KV
+        sits beyond every causal mask and is overwritten by the next
+        step's writes at the same positions.  Block-table tails freed by
+        the rewind are reclaimed host-side (``_truncate_slot_blocks``).
+
+        ``decode_only=True`` is the steady-state specialization (the
+        ``_decode`` program): no prompt lanes anywhere, so the draft's
+        chunk-prefill pass is dropped and the verify attend shrinks from
+        ``chunk_size`` to ``k + 1`` lanes.
+        """
+        with backend.use(self.matmul_backend), self._mesh_scope():
+            B = self.max_batch
+            k = self.speculation.k
+            greedy_mode = self.speculation.greedy_accept
+            W = self.spec_horizon if decode_only else self.chunk_size
+            rng, keys = split_keys(state.rng)
+            if decode_only:
+                prefilling = jnp.zeros((B,), bool)
+            else:
+                prefilling = chunk_len > 0
+            decoding = state.active & (state.pf_pos >= state.prompt_len)
+            p_t, p_d = params
+            c_t, c_d = cache
+            start = jnp.where(prefilling, state.pf_pos, state.index)
+
+            if not decode_only:
+                # draft rides the same prompt chunks: its private cache
+                # must hold the prompt KV before it can propose (logits
+                # discarded; a prefix-cache hit skips these positions for
+                # the target but not the draft — see README, acceptance
+                # simply degrades on the reused span)
+                gidx = jnp.minimum(
+                    start[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :],
+                    self.max_len - 1)
+                ptoks = jnp.take_along_axis(state.prompt_buf, gidx, axis=1)
+                n_pf = jnp.where(prefilling, chunk_len, 0)
+                _, c_d = self.draft_model.mixed_step(
+                    p_d, c_d, ptoks, start, n_pf, prefill_lanes=prefilling)
+
+            # draft proposes k tokens, one masked lane per inner pass
+            # (mixed_step, NOT decode_step: dead lanes must write nothing
+            # — idle and prefilling slots would corrupt their own cache)
+            dec1 = jnp.where(decoding, 1, 0)
+            cur = state.last
+            proposals, dlogits = [], []
+            for j in range(k):
+                lg, c_d = self.draft_model.mixed_step(
+                    p_d, c_d, cur, state.index + j, dec1)
+                dl = lg[:, 0]
+                g = jnp.argmax(dl, axis=-1).astype(jnp.int32)
+                if greedy_mode:
+                    d = g
+                else:
+                    # temperature-only proposal, matching the densities
+                    # speculative_accept uses in its accept ratio
+                    x = dl.astype(jnp.float32) \
+                        / jnp.maximum(state.temp, 1e-6)[:, None]
+                    dj = jax.vmap(jax.random.categorical)(
+                        fold_in_keys(keys, j + 2), x).astype(jnp.int32)
+                    d = jnp.where(state.temp <= 0.0, g, dj)
+                proposals.append(d)
+                dlogits.append(dl)
+                cur = d[:, None]
+            # write-only pass: park d_k's KV at index+k so a fully
+            # accepted step leaves no hole in the draft cache (the next
+            # propose pass attends across index..index+k)
+            _, c_d = self.draft_model.mixed_step(
+                p_d, c_d, cur, state.index + k, dec1)
+            d_toks = jnp.stack(proposals, axis=1)          # [B, k]
+            d_logits = jnp.stack(dlogits, axis=1)          # [B, k, V]
+
+            # target verify: [last, d_1..d_k] occupy positions
+            # index..index+k; lane j's logits condition on the prefix
+            # plus proposals 1..j.  Lanes past the cache end are masked
+            # (n_spec), their writes land in the null block.
+            ver = jnp.concatenate([state.last, d_toks], axis=1)  # [B, k+1]
+            ver_w = jnp.pad(ver, ((0, 0), (0, W - (k + 1))))
+            n_spec = jnp.clip(self.max_len - state.index, 0, k + 1)
+            n_live = jnp.where(prefilling, 0, jnp.where(decoding, n_spec, 0))
+            toks = ver_w
+            if not decode_only:
+                n_live = jnp.where(prefilling, chunk_len, n_live)
+                toks = jnp.where(prefilling[:, None], ptoks, ver_w)
+            if self.fabric is not None:
+                logits, c_t = self.fabric.mixed_step(
+                    p_t, c_t, toks, start, n_live, state.topo,
+                    block_tables=block_tables,
+                    paged_attn_impl=self.spec.execution.paged_attn_impl,
+                    interpret=self._interpret)
+            else:
+                logits, c_t = self._traced_model.mixed_step(
+                    p_t, c_t, toks, start, n_live,
+                    block_tables=block_tables, prefill_lanes=prefilling)
+
+            # accept / rollback over the k+1 verify lanes
+            n_acc, out = speculative_accept(
+                logits[:, :k + 1], d_toks, d_logits, fold_in_keys(keys, 1),
+                state.temp, greedy=greedy_mode)
+            n_acc = jnp.minimum(n_acc, jnp.maximum(n_spec - 1, 0))
+            jar = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+            cand = (jar <= n_acc[:, None]) & decoding[:, None]
+            room = state.count[:, None] + jar < state.budget[:, None]
+            is_eos = (state.eos[:, None] >= 0) & (out == state.eos[:, None])
+            stop = cand & room & is_eos
+            eos_before = jnp.cumsum(stop.astype(jnp.int32), axis=1) \
+                - stop.astype(jnp.int32)
+            # valid lanes form a prefix run: room and eos cuts are
+            # monotone in j, so m = sum(valid) and out[:, :m] is emitted
+            valid = cand & room & (eos_before == 0)
+            m = valid.sum(axis=1).astype(jnp.int32)
+
+            rows = jnp.arange(B)
+            # invalid lanes are routed out of bounds and dropped — a
+            # where-write at a clamped position would race a valid lane's
+            # scatter at max_len - 1
+            wpos = jnp.where(valid, state.count[:, None] + jar, self.max_len)
+            buf = state.buf.at[rows[:, None], wpos].set(out, mode="drop")
+            count = state.count + m
+            index = state.index + jnp.where(decoding, m, 0)
+            pf_pos = state.pf_pos
+            last_dec = jnp.take_along_axis(
+                out, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            lastv = jnp.where(decoding, last_dec, state.last[:, 0])
+            emit = decoding
+            hit_eos = stop.any(axis=1)
+
+            if not decode_only:
+                # completing prompt chunks sample their first token from
+                # the verify pass's own logits — identical to the base
+                # mixed step
+                completes = prefilling & \
+                    (state.pf_pos + chunk_len >= state.prompt_len)
+                sel = jnp.where(completes, chunk_len - 1, 0)
+                lsel = jnp.take_along_axis(logits, sel[:, None, None],
+                                           axis=1)[:, 0]
+                toks_s = sample_per_slot(lsel, fold_in_keys(keys, 0),
+                                         state.temp, state.top_k,
+                                         state.top_p)
+                buf = buf.at[rows, jnp.where(completes, count,
+                                             self.max_len)].set(
+                    toks_s, mode="drop")
+                count = count + completes.astype(jnp.int32)
+                index = index + jnp.where(prefilling, chunk_len, 0)
+                pf_pos = pf_pos + jnp.where(prefilling, chunk_len, 0)
+                lastv = jnp.where(completes, toks_s, lastv)
+                emit = emit | completes
+                hit_eos = hit_eos | (completes & (state.eos >= 0)
+                                     & (toks_s == state.eos))
+
+            finish = emit & (hit_eos | (count >= state.budget)
+                             | (index >= self.max_len))
+            state = state._replace(
+                last=lastv[:, None],
+                index=index,
+                active=state.active & ~finish,
+                done=state.done | finish,
+                count=count,
+                buf=buf,
+                rng=rng,
+                pf_pos=pf_pos,
+                acc=state.acc + jnp.where(decoding,
+                                          jnp.maximum(m - 1, 0), 0),
+                spec_steps=state.spec_steps + decoding.astype(jnp.int32))
+            c_t, state = self._pin_outputs(c_t, state)
+            if self._mesh is not None:
+                rep = shd.replicated(self._mesh)
+                c_d = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, rep), c_d)
+            return (c_t, c_d), state
 
     # ------------------------------------------------------------------
     # host-side control (dispatch-only between syncs)
@@ -1109,6 +1383,11 @@ class ServingEngine:
         if self.paging is None:
             return
         bs = self.paging.block_size
+        # a speculative step writes up to spec_horizon (= k+1) verify
+        # positions per fused step instead of 1, so the reservation
+        # window scales with it (over-reserved tails are reclaimed at
+        # the next sync by _truncate_slot_blocks)
+        h = horizon * self.spec_horizon
         for slot in sorted(self._occupied(),
                            key=lambda s: self._admit_seq[s]):
             if self.slot_req[slot] is None:   # preempted by an earlier turn
@@ -1117,10 +1396,10 @@ class ServingEngine:
                 # a mid-prefill slot owns its prompt's blocks already; it
                 # needs >= 1 step to finish the prompt, so it can write at
                 # most horizon - 1 decode tokens on top within the window
-                need_tokens = min(self._plen[slot] + horizon - 1,
+                need_tokens = min(self._plen[slot] + h - 1,
                                   self._slot_token_cap(slot))
             else:
-                need_tokens = min(self._idx_ub[slot] + horizon,
+                need_tokens = min(self._idx_ub[slot] + h,
                                   self._slot_token_cap(slot))
             missing = blocks_for_tokens(need_tokens, bs) \
                 - len(self._slot_blocks[slot])
@@ -1159,6 +1438,30 @@ class ServingEngine:
         self._tables_dirty = True
         self._reg_done[slot] = False
 
+    def _truncate_slot_blocks(self, slot: int, keep_tokens: int) -> None:
+        """Roll back a slot's block tail after rejected speculation: the
+        dispatch loop reserved ``spec_horizon`` positions per step but
+        the accepted length is only known at the sync, so blocks past
+        the last resident token are handed back through the decref-aware
+        ``BlockAllocator.truncate`` — still-shared blocks just lose one
+        reference, trie-owned blocks park in the LRU tier (never free:
+        another request's prefix may gather from them), and only
+        private, uncached blocks return to the free list.  The table
+        tail is nulled so the next verify pass's masked overrun writes
+        land in the null block, never a reassigned one."""
+        keep = blocks_for_tokens(keep_tokens, self.paging.block_size)
+        blocks = self._slot_blocks[slot]
+        if keep >= len(blocks):
+            return
+        kept, zeros = self.allocator.truncate(blocks, keep)
+        if self.prefix_cache is not None:
+            zeros = self.prefix_cache.park(zeros)
+        self.allocator.free(zeros)
+        self._slot_blocks[slot] = kept
+        row = self._tables[slot]
+        row[keep:] = [NULL_BLOCK] * (self.blocks_per_slot - keep)
+        self._tables_dirty = True
+
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: bank the slot's generated tokens, free its
         blocks, and push the request back to the queue head — it resumes
@@ -1196,17 +1499,29 @@ class ServingEngine:
         if self.scheduler == "chunked":
             grants = self._grant_chunks()
             granted = sum(grants)
+            # under speculation the draft rides inside the same dispatch:
+            # the jitted step takes (target, draft) pairs for params and
+            # cache, and the donated tuple comes back the same shape
+            params: object = self.params
+            cache: object = self.cache
+            if self.speculation is not None:
+                params = (self.params, self.draft_params)
+                cache = (self.cache, self.draft_cache)
             if granted:
-                self.cache, self.state = self._step(
-                    self.params, self.cache, self.state, self.block_tables,
+                cache, self.state = self._step(
+                    params, cache, self.state, self.block_tables,
                     jnp.asarray(grants, jnp.int32))
             else:
                 # steady state (no prompt work anywhere): the one-lane
                 # fused decode is the W == 1 special case of the mixed
                 # step — same math, same rng schedule, ~chunk_size x less
                 # query compute.  Still exactly one dispatch per step.
-                self.cache, self.state = self._decode(
-                    self.params, self.cache, self.state, self.block_tables)
+                cache, self.state = self._decode(
+                    params, cache, self.state, self.block_tables)
+            if self.speculation is not None:
+                self.cache, self.draft_cache = cache
+            else:
+                self.cache = cache
             self.stats["decode_steps"] += 1
             self.stats["prefill_tokens"] += granted
             self.stats["max_step_prefill_tokens"] = max(
@@ -1220,8 +1535,11 @@ class ServingEngine:
                         # slot's first token (``completes`` in the step)
                         self._emit_first_token(self.slot_req[slot].uid)
                 elif self._pf[slot] >= self._plen[slot]:
-                    self._idx_ub[slot] = min(self._idx_ub[slot] + 1,
-                                             self._slot_token_cap(slot))
+                    # a speculative step can land up to k+1 tokens; the
+                    # mirror is an upper bound until the next sync
+                    self._idx_ub[slot] = min(
+                        self._idx_ub[slot] + self.spec_horizon,
+                        self._slot_token_cap(slot))
             if self.prefix_cache is not None:
                 self._register_prefixes()
             return
@@ -1256,7 +1574,14 @@ class ServingEngine:
         pulled (one more bulk get) only for slots that actually finished,
         sliced to the longest finished stream — the transfer scales with
         the tokens produced, not with max_len."""
-        done_h, count_h = jax.device_get((self.state.done, self.state.count))
+        if self.speculation is not None:
+            done_h, count_h, acc_h, ss_h = jax.device_get(
+                (self.state.done, self.state.count, self.state.acc,
+                 self.state.spec_steps))
+        else:
+            done_h, count_h = jax.device_get(
+                (self.state.done, self.state.count))
+            acc_h = ss_h = None
         self.stats["device_gets"] += 1
         occ = self._occupied()
         slots = [i for i in occ if done_h[i]]
@@ -1265,11 +1590,23 @@ class ServingEngine:
                 self._idx_ub[i] = self._pf[i]   # mid-prefill: mirror exact
             else:
                 self._idx_ub[i] = self._plen[i] + max(int(count_h[i]) - 1, 0)
+                if (self.speculation is not None and self.paging is not None
+                        and not done_h[i]):
+                    # speculative rollback, host half: the dispatch loop
+                    # reserved spec_horizon positions/step; now that the
+                    # exact resident length is known, hand the rejected
+                    # tail's blocks back (shared ones park, never free)
+                    self._truncate_slot_blocks(i, self._idx_ub[i])
             # completion-honest telemetry: the device_get above ordered
             # this sync behind the dispatched steps, so these counts (and
             # their wall stamps) reflect tokens that actually exist
-            self._emit("progress", self.slot_req[i].uid,
-                       count=int(count_h[i]))
+            if acc_h is not None:
+                self._emit("progress", self.slot_req[i].uid,
+                           count=int(count_h[i]), accepted=int(acc_h[i]),
+                           spec_steps=int(ss_h[i]))
+            else:
+                self._emit("progress", self.slot_req[i].uid,
+                           count=int(count_h[i]))
         if not slots:
             return []
         maxc = max(int(count_h[i]) for i in slots)
@@ -1282,6 +1619,9 @@ class ServingEngine:
             req = self.slot_req[i]
             req.generated = req.prefix + [int(t) for t in row[:count_h[i]]]
             req.done = True
+            if acc_h is not None:
+                self.stats["spec_accepted"] += int(acc_h[i])
+                self.stats["spec_steps"] += int(ss_h[i])
             self.slot_req[i] = None
             if self.paging is not None:
                 self._release_slot_blocks(i)

@@ -25,7 +25,12 @@ Lifecycle of one request::
   the slot's generated-token ``count``.  Emitted *after* the harvest's
   bulk ``device_get``, so its wall-clock stamp is completion-honest
   (the dispatch-side stamps on ``first_token`` are not — use the first
-  ``progress`` with ``count >= 1`` for wall-clock TTFT).
+  ``progress`` with ``count >= 1`` for wall-clock TTFT).  With
+  speculative decoding the event also carries the slot's cumulative
+  ``accepted`` (draft tokens the target verified) and ``spec_steps``
+  (fused steps the slot spec-decoded in) — both in the deterministic
+  step currency, reduced by ``harness.metrics`` into the
+  mean-accepted-draft-length metric.
 * ``finish``       — the request completed and was harvested.
   data: ``n_generated``.
 * ``preempt``      — the slot was recompute-preempted; the request

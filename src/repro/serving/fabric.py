@@ -603,6 +603,14 @@ class DecodeFabric:
         covers intra-chunk causality and the prior cache.  Register
         values, lane counts and chunk contents are all data: prefill and
         decode for the whole fleet share this one compilation.
+
+        This same program doubles as the **speculative verify pass**
+        (``serving/engine.py``): a decoding slot presents its last
+        emitted token plus the draft's ``k`` proposals as ``k + 1``
+        live lanes starting at its decode index, and the returned
+        per-lane logits score every proposal in one attend.  Nothing
+        here is speculation-specific — lane counts are already data —
+        which is why fleet members get speculative decoding for free.
         """
         mx = self.mx
         B, W = tokens.shape

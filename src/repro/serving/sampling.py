@@ -56,6 +56,26 @@ def sample(logits: jax.Array, rng: jax.Array,
 
 
 # jit-region
+def split_keys(keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split per-slot PRNG key lanes [B, 2] -> (carry [B, 2], use [B, 2]).
+
+    The serving engine carries one key *per slot* in ``SlotState.rng``
+    and splits every lane once per fused step: each slot's stream is a
+    pure function of its own lane, so the harness can replay a trace
+    byte-identically regardless of which other slots were resident.
+    """
+    both = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
+    return both[:, 0], both[:, 1]
+
+
+# jit-region
+def fold_in_keys(keys: jax.Array, data: int) -> jax.Array:
+    """Per-slot ``fold_in``: derive a named substream from each [B, 2]
+    key lane (draft step j, accept pass, ...) without consuming it."""
+    return jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, data)
+
+
+# jit-region
 def sample_per_slot(logits: jax.Array, rng: jax.Array,
                     temperature: jax.Array, top_k: jax.Array,
                     top_p: jax.Array) -> jax.Array:
@@ -64,6 +84,10 @@ def sample_per_slot(logits: jax.Array, rng: jax.Array,
     Rows with temperature <= 0 are greedy (bit-identical to ``sample``'s
     greedy path); top_k == 0 and top_p == 1.0 disable those filters per
     row.  Everything is data, nothing retraces.
+
+    ``rng`` is either one key [2] shared across rows (the historical
+    shape) or per-slot key lanes [B, 2] — the serving path, where each
+    slot draws from its own stream so replays are slot-local.
     """
     v = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -84,5 +108,84 @@ def sample_per_slot(logits: jax.Array, rng: jax.Array,
     cutoff = jnp.min(jnp.where(keep, sorted_f, jnp.inf), axis=-1,
                      keepdims=True)
     x = jnp.where(x < cutoff, -jnp.inf, x)
-    toks = jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
+    if rng.ndim == 2:
+        toks = jax.vmap(jax.random.categorical)(rng, x).astype(jnp.int32)
+    else:
+        toks = jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy, toks)
+
+
+# jit-region
+def speculative_accept(target_logits: jax.Array, draft_toks: jax.Array,
+                       draft_logits: jax.Array, keys: jax.Array,
+                       temperature: jax.Array,
+                       greedy: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Vectorized per-slot accept/reject over one verify pass.
+
+    ``target_logits`` [B, k+1, V]: lane ``j`` is the target distribution
+    after the prefix plus draft tokens ``1..j``; ``draft_toks`` [B, k]
+    are the proposals (``draft_toks[:, j]`` was drawn from lane ``j`` of
+    ``draft_logits`` [B, k, V]); ``keys`` [B, 2] per-slot key lanes.
+
+    Returns ``(n_acc [B] i32, out [B, k+1] i32)``: ``out[:, :n_acc]``
+    are the accepted proposals and ``out[:, n_acc]`` is the bonus /
+    correction token, so a slot emits ``n_acc + 1`` tokens.
+
+    Greedy path (``greedy=True`` or temperature <= 0): proposal ``j+1``
+    is accepted iff it equals the target argmax at lane ``j``
+    (cumulative AND), and since an accepted proposal *is* that argmax,
+    ``out`` is simply the per-lane argmax — the emitted stream is
+    token-identical to target-only greedy decode by induction.
+
+    Stochastic path: standard rejection sampling — accept with
+    probability ``min(1, p_t(d)/p_d(d))`` on the temperature-softened
+    distributions; on the first reject, resample from the normalized
+    residual ``max(p_t - p_d, 0)``.  (top-k/top-p filters are not
+    applied on this path; greedy rows are exact regardless.)
+    """
+    b, lanes, _ = target_logits.shape
+    k = lanes - 1
+    g = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, k+1]
+    match = g[:, :k] == draft_toks                            # [B, k]
+    g_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    # ``greedy`` is a trace-time Python bool (SpeculationSpec.greedy_accept,
+    # fixed per engine), so this branch specializes the program, it never
+    # retraces
+    if greedy:  # ra: ignore[RA002]
+        return g_acc, g
+
+    t = jnp.maximum(temperature, 1e-6)[:, None, None]
+    pt = jax.nn.softmax(target_logits.astype(jnp.float32) / t, axis=-1)
+    pd = jax.nn.softmax(draft_logits.astype(jnp.float32) / t[:, :k], axis=-1)
+    rows = jnp.arange(b)[:, None]
+    cols = jnp.arange(k)[None, :]
+    pt_d = pt[rows, cols, draft_toks]                         # [B, k]
+    pd_d = pd[rows, cols, draft_toks]
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(
+        fold_in_keys(keys, 0))
+    ok = u * pd_d < pt_d                                      # [B, k]
+    s_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    # residual at the reject lane (lane k when everything was accepted:
+    # the residual degenerates to pt itself because pd is a one-hot of
+    # nothing there — we just gather pt at lane s_acc and subtract a
+    # zeroed pd slice)
+    sel = jnp.minimum(s_acc, k)[:, None, None]
+    pt_r = jnp.take_along_axis(pt, sel, axis=1)[:, 0]         # [B, V]
+    pd_pad = jnp.concatenate(
+        [pd, jnp.zeros_like(pd[:, :1])], axis=1)              # [B, k+1, V]
+    pd_r = jnp.take_along_axis(pd_pad, sel, axis=1)[:, 0]
+    resid = jnp.maximum(pt_r - jnp.where(s_acc[:, None] < k, pd_r, 0.0), 0.0)
+    resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-20)
+    bonus = jax.vmap(jax.random.categorical)(
+        fold_in_keys(keys, 1), jnp.log(jnp.maximum(resid, 1e-38))
+    ).astype(jnp.int32)
+    # out[:, j] = accepted proposal for j < n_acc, bonus at j == n_acc
+    jar = jnp.arange(k + 1)[None, :]
+    d_pad = jnp.concatenate(
+        [draft_toks, jnp.zeros_like(draft_toks[:, :1])], axis=1)
+    s_out = jnp.where(jar < s_acc[:, None], d_pad,
+                      jnp.where(jar == s_acc[:, None], bonus[:, None], 0))
+    is_greedy = temperature <= 0.0
+    n_acc = jnp.where(is_greedy, g_acc, s_acc).astype(jnp.int32)
+    out = jnp.where(is_greedy[:, None], g, s_out)
+    return n_acc, out

@@ -180,6 +180,42 @@ def test_itl_rebaseline_on_count_decrease():
     assert m.per_request[0]["max_itl_steps"] == 2.0
 
 
+def test_spec_metrics_hand_computed():
+    """Mean accepted draft length from the cumulative ``accepted`` /
+    ``spec_steps`` progress counters, including the preemption
+    re-baseline (mirrors the ITL count-decrease rule)."""
+    events = [
+        _ev("submit", 0, 0, 0.0), _ev("admit", 0, 0, 0.0),
+        _ev("submit", 1, 0, 0.0), _ev("admit", 1, 0, 0.0),
+        # r0 speculates: cumulative counters ride its progress events
+        _ev("progress", 0, 1, 1.0, count=3, accepted=2, spec_steps=1),
+        # r1 speculates twice and accepts nothing — steps still count
+        _ev("progress", 1, 1, 1.0, count=2, accepted=0, spec_steps=2),
+        _ev("finish", 1, 1, 1.0, n_generated=2),
+        _ev("progress", 0, 2, 2.0, count=7, accepted=5, spec_steps=3),
+        # preemption resets the device counters: accepted drops 5 -> 1,
+        # so the (5, 3) epoch banks and the new epoch re-baselines
+        _ev("preempt", 0, 3, 3.0, banked=0),
+        _ev("admit", 0, 4, 4.0),
+        _ev("progress", 0, 5, 5.0, count=2, accepted=1, spec_steps=1),
+        _ev("finish", 0, 5, 5.0, n_generated=2),
+    ]
+    m = reduce_events(events)
+    # r0 banks (5 acc, 3 steps) at the reset plus its open (1, 1) epoch;
+    # r1 adds (0, 2): 6 accepted tokens over 6 speculative steps
+    assert m.spec_accepted_tokens == 6
+    assert m.spec_steps == 6
+    assert m.mean_accepted_len == pytest.approx(1.0)
+    # spec fields are step-currency: they ride the deterministic view
+    assert m.deterministic()["mean_accepted_len"] == pytest.approx(1.0)
+
+
+def test_spec_metrics_absent_without_speculation():
+    m = reduce_events(_toy_events())
+    assert m.spec_accepted_tokens == 0 and m.spec_steps == 0
+    assert m.mean_accepted_len is None
+
+
 def test_percentile_nearest_rank():
     assert percentile([], 50) is None
     assert percentile([4, 1, 3, 2], 50) == 2

@@ -509,6 +509,52 @@ def test_prefix_mid_prefill_preemption_rehits_trie(qwen):
     assert streams[True] == streams[False]
 
 
+# ---------------------------------------------------------------------------
+# Speculative rollback: decref-aware block-tail truncate (PR 10)
+# ---------------------------------------------------------------------------
+def test_allocator_truncate_decref_aware():
+    a = BlockAllocator(PagingConfig(block_size=8, num_blocks=8))
+    got = a.alloc(4)
+    kept, zeros = a.truncate(got, 2)
+    assert kept == got[:2] and zeros == got[2:]
+    a.free(zeros)
+    assert a.num_free == 6
+    with pytest.raises(ValueError, match="cannot keep"):
+        a.truncate(got[:2], -1)
+    kept, zeros = a.truncate(got[:2], 5)       # keep >= len: no-op
+    assert kept == got[:2] and zeros == []
+
+
+def test_rollback_while_shared_parks_trie_blocks():
+    """Regression: a speculative rollback that truncates a slot's block
+    tail while another request (or the trie) still holds the blocks must
+    decref — never free.  Trie-owned blocks whose refcount hits zero
+    park (stay resident for future prefix hits); only unowned remainders
+    reach the free list."""
+    from repro.core.paging import PrefixCache
+    a = BlockAllocator(PagingConfig(block_size=4, num_blocks=8))
+    pc = PrefixCache(a)
+    chain = a.alloc(2)                     # slot A's blocks, registered
+    pc.insert(0, list(range(1, 9)), chain)
+    a.incref(chain)                        # slot B maps the same chain
+    # slot A rewinds past block 2: refcount 2 -> 1, the block stays
+    # mapped for B and must not surface in the zero list
+    kept, zeros = a.truncate(chain, 1)
+    assert kept == chain[:1] and zeros == []
+    assert a.ref(chain[1]) == 1
+    # slot B rewinds too: refcount hits zero, but the trie owns the
+    # block — it parks instead of freeing
+    kept, zeros = a.truncate(chain, 1)
+    assert zeros == chain[1:]
+    assert pc.park(zeros) == []            # trie-owned: parked, not freed
+    assert pc.num_parked == 1
+    assert chain[1] not in a._free
+    assert a.stats().cached_blocks == 1
+    # the parked tail is still a live prefix hit for future requests
+    hit = pc.lookup(0, list(range(1, 9)) + [0], limit=8)
+    assert hit.tokens == 8 and hit.blocks == chain
+
+
 def test_prefix_cache_requires_paged_layout():
     from repro.core.spec import MemorySpec
     with pytest.raises(ValueError, match="requires cache_layout='paged'"):
